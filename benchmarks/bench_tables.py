@@ -1,0 +1,20 @@
+"""Paper Tables I & II: INA round counts per CONV layer."""
+from repro.core.ina_model import ina_table
+from repro.core.workloads import ALEXNET, VGG16
+
+
+def run() -> list[str]:
+    lines = []
+    for name, layers, n_list in (("alexnet", ALEXNET, (8, 16)),
+                                 ("vgg16", VGG16, (8, 16))):
+        for n in n_list:
+            for row in ina_table(layers, n=n):
+                ina = row["INA#"] if row["INA#"] is not None else "NA"
+                lines.append(
+                    f"table_{name}_N{n},{row['layer']},P#={row['P#']},"
+                    f"INA#={ina}")
+    return lines
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

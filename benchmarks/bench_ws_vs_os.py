@@ -1,0 +1,24 @@
+"""Paper Figs 10-12: WS+INA vs OS-with-gather latency/power improvement."""
+import time
+
+from repro.core.noc.power import ws_vs_os_improvement
+from repro.core.workloads import WORKLOADS
+
+
+def run(sim_rounds: int = 16) -> list[str]:
+    lines = []
+    for name, layers in WORKLOADS.items():
+        for e in (1, 2, 4, 8):
+            t0 = time.time()
+            imp = ws_vs_os_improvement(name, layers, e, sim_rounds=sim_rounds)
+            us = (time.time() - t0) * 1e6
+            lines.append(f"fig10_12_{name}_E{e},{us:.0f},"
+                         f"latency_x={imp.latency_x:.3f};"
+                         f"energy_x={imp.energy_x:.3f};"
+                         f"power_x={imp.power_x:.3f}")
+    lines.append("fig10_12_note,0,paper=up_to_1.19x_latency_2.16x_power")
+    return lines
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

@@ -1,0 +1,103 @@
+"""SSPerf hillclimb driver: hypothesis -> change -> re-lower -> validate.
+
+Measures the three roofline terms for named configuration variants of one
+(arch x shape) cell on the single-pod mesh, so each perf iteration is a
+one-line variant spec.  Results feed EXPERIMENTS.md SSPerf.
+
+Usage:
+  PYTHONPATH=src python -m benchmarks.perf_iterations --cell llama3-8b:train_4k
+  PYTHONPATH=src python -m benchmarks.perf_iterations --cell llama4-scout-17b-16e:train_4k --out results/perf_llama4.json
+"""
+import os
+if not os.environ.get("XLA_FLAGS"):
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+import argparse
+import dataclasses
+import json
+import time
+
+from repro.configs import ARCHS, SHAPES
+from repro.launch.dryrun import roofline_costs
+from repro.launch.mesh import make_production_mesh
+from repro.parallel.tp import ParallelCtx
+
+PEAK_FLOPS, HBM_BW, LINK_BW = 197e12, 819e9, 50e9
+
+
+def hillclimb_mesh(tp: int = 16, dp: int = 4):
+    """Reduced-DP mesh for perf iterations: keeps the model axis (the INA
+    dimension) at production width while shrinking the SPMD partition count
+    so single-core compiles stay tractable.  Model-axis collective terms are
+    representative; data-axis (FSDP/DP) terms scale with DP and are reported
+    as-is with the mesh recorded."""
+    import jax
+    from jax.sharding import AxisType
+    return jax.make_mesh((dp, tp), ("data", "model"),
+                         axis_types=(AxisType.Auto,) * 2)
+
+
+def measure(arch: str, shape_name: str, mesh, cfg_over: dict | None = None,
+            pctx_over: dict | None = None, fast: bool = False) -> dict:
+    cfg = ARCHS[arch]
+    moe_over = (cfg_over or {}).pop("__moe__", None)
+    ssm_over = (cfg_over or {}).pop("__ssm__", None)
+    if moe_over and cfg.moe:
+        cfg = dataclasses.replace(cfg, moe=dataclasses.replace(cfg.moe,
+                                                               **moe_over))
+    if ssm_over and cfg.ssm:
+        cfg = dataclasses.replace(cfg, ssm=dataclasses.replace(cfg.ssm,
+                                                               **ssm_over))
+    if cfg_over:
+        cfg = dataclasses.replace(cfg, **cfg_over)
+    pctx = ParallelCtx(mesh=mesh, **(pctx_over or {}))
+    t0 = time.time()
+    r = roofline_costs(cfg, SHAPES[shape_name], mesh, pctx, fast=fast)
+    r["wall_s"] = round(time.time() - t0, 1)
+    r["compute_s"] = r["flops"] / PEAK_FLOPS
+    r["memory_s"] = r["bytes"] / HBM_BW
+    r["collective_s"] = r["coll"] / LINK_BW
+    terms = {k: r[f"{k}_s"] for k in ("compute", "memory", "collective")}
+    r["dominant"] = max(terms, key=terms.get)
+    r["step_s"] = max(terms.values())     # roofline-limited step estimate
+    return r
+
+
+# Variant presets per hillclimbed cell: (name, cfg_overrides, pctx_overrides)
+VARIANTS = {
+    "default": [
+        ("baseline_xla", {}, {"psum_mode": "xla_spmd"}),
+        ("paper_eject_inject", {}, {"psum_mode": "eject_inject"}),
+        ("paper_ina_ring", {}, {"psum_mode": "ina_ring"}),
+        ("ina_xla_rs", {}, {"psum_mode": "ina"}),
+    ],
+}
+
+
+def run_cell(cell: str, variants=None) -> list[dict]:
+    arch, shape = cell.split(":")
+    mesh = make_production_mesh(multi_pod=False)
+    out = []
+    for name, cfg_over, pctx_over in (variants or VARIANTS["default"]):
+        r = measure(arch, shape, mesh, dict(cfg_over), dict(pctx_over))
+        row = {"cell": cell, "variant": name,
+               "compute_s": r["compute_s"], "memory_s": r["memory_s"],
+               "collective_s": r["collective_s"], "dominant": r["dominant"],
+               "step_s": r["step_s"], "wall_s": r["wall_s"]}
+        out.append(row)
+        print(f"[perf] {cell} {name}: compute={r['compute_s']:.3e} "
+              f"memory={r['memory_s']:.3e} coll={r['collective_s']:.3e} "
+              f"dom={r['dominant']} step~{r['step_s']:.3e}s "
+              f"({r['wall_s']}s to measure)")
+    return out
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--cell", required=True)
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+    rows = run_cell(args.cell)
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(rows, f, indent=1)

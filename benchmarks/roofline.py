@@ -1,0 +1,125 @@
+"""Roofline analysis: three terms per (arch x shape) from the dry-run JSON.
+
+  compute    = HLO_FLOPs / peak_FLOP/s          (per device)
+  memory     = HLO_bytes / HBM_bw               (per device)
+  collective = collective_bytes / link_bw       (per device; DESIGN.md S6)
+
+HLO_FLOPs/bytes come from the unrolled-marginal extrapolation recorded by
+launch/dryrun.py (XLA's cost_analysis counts scan bodies once, so the raw
+full-depth numbers are NOT usable).  MODEL_FLOPS = 6*N*D (train) or 2*N*D
+(inference forward), N = non-embedding (activated) params.
+
+Usage: PYTHONPATH=src python -m benchmarks.roofline results/dryrun_singlepod.json
+"""
+from __future__ import annotations
+
+import json
+import sys
+
+import jax
+
+from repro.configs import ARCHS, SHAPES
+from repro.models.api import get_model
+
+# TPU v5e-class hardware constants (per prompt)
+PEAK_FLOPS = 197e12       # bf16 FLOP/s per chip
+HBM_BW = 819e9            # B/s per chip
+LINK_BW = 50e9            # B/s per ICI link
+
+
+def activated_params(arch: str) -> tuple[int, int]:
+    """(N_total_nonembed, N_activated_nonembed) from the real param tree."""
+    cfg = ARCHS[arch]
+    model = get_model(cfg)
+    shapes = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    flat = jax.tree_util.tree_flatten_with_path(shapes)[0]
+    total = act = 0
+    for path, leaf in flat:
+        name = jax.tree_util.keystr(path)
+        n = 1
+        for d in leaf.shape:
+            n *= d
+        if "embed" in name or "lm_head" in name or "pos_dec" in name:
+            continue
+        total += n
+        if cfg.moe and ("w_gate" in name or "w_up" in name
+                        or "w_down" in name) and len(leaf.shape) >= 3 \
+                and "shared" not in name:
+            act += n * cfg.moe.top_k / cfg.moe.num_experts
+        else:
+            act += n
+    return int(total), int(act)
+
+
+def model_flops(arch: str, shape_name: str) -> float:
+    """6*N*D (train) / 2*N*D (inference fwd), D = tokens, per device."""
+    cfg, shape = ARCHS[arch], SHAPES[shape_name]
+    _, n_act = activated_params(arch)
+    tokens = shape.global_batch * (shape.seq_len
+                                   if shape.kind in ("train", "prefill") else 1)
+    mult = 6 if shape.kind == "train" else 2
+    return mult * n_act * tokens
+
+
+def analyze(cell: dict) -> dict:
+    r = cell.get("roofline")
+    if not r:
+        return {}
+    devices = cell["devices"]
+    compute_s = max(r["flops"], 0.0) / PEAK_FLOPS
+    memory_s = max(r["bytes"], 0.0) / HBM_BW
+    # tiny cells can show negative extrapolated marginals (compile noise
+    # between the two unrolled costing points); clamp at zero
+    collective_s = max(r["coll"], 0.0) / LINK_BW
+    terms = {"compute": compute_s, "memory": memory_s,
+             "collective": collective_s}
+    dominant = max(terms, key=terms.get)
+    mf = model_flops(cell["arch"], cell["shape"]) / devices
+    return {
+        "arch": cell["arch"], "shape": cell["shape"],
+        "compute_s": compute_s, "memory_s": memory_s,
+        "collective_s": collective_s, "dominant": dominant,
+        "model_flops_per_dev": mf,
+        "useful_ratio": mf / r["flops"] if r["flops"] else 0.0,
+        "roofline_fraction": terms[dominant] and compute_s / terms[dominant],
+        "peak_hbm_bytes": cell["memory"]["temp_bytes"]
+        + cell["memory"]["argument_bytes"],
+    }
+
+
+def render(results: list[dict]) -> str:
+    rows = [analyze(c) for c in results if c.get("roofline")]
+    rows = [r for r in rows if r]
+    out = ["| arch | shape | compute (s) | memory (s) | collective (s) | "
+           "dominant | MODEL/HLO flops | roofline frac |",
+           "|---|---|---|---|---|---|---|---|"]
+    for r in sorted(rows, key=lambda r: (r["arch"], r["shape"])):
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['compute_s']:.3e} | "
+            f"{r['memory_s']:.3e} | {r['collective_s']:.3e} | "
+            f"**{r['dominant']}** | {r['useful_ratio']:.2f} | "
+            f"{r['roofline_fraction']:.2f} |")
+    return "\n".join(out)
+
+
+def run(path: str = "results/dryrun_singlepod.json") -> list[str]:
+    with open(path) as f:
+        data = json.load(f)
+    lines = []
+    for cell in data["results"]:
+        a = analyze(cell)
+        if not a:
+            continue
+        lines.append(
+            f"roofline_{a['arch']}_{a['shape']},0,"
+            f"compute={a['compute_s']:.3e};memory={a['memory_s']:.3e};"
+            f"collective={a['collective_s']:.3e};dominant={a['dominant']};"
+            f"useful={a['useful_ratio']:.3f};frac={a['roofline_fraction']:.3f}")
+    return lines
+
+
+if __name__ == "__main__":
+    path = sys.argv[1] if len(sys.argv) > 1 else "results/dryrun_singlepod.json"
+    with open(path) as f:
+        data = json.load(f)
+    print(render(data["results"]))

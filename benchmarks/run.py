@@ -1,0 +1,27 @@
+# One function per paper table. Print ``name,us_per_call,derived`` CSV.
+import os
+import sys
+
+
+def main() -> None:
+    from benchmarks import (bench_collectives, bench_kernels, bench_tables,
+                            bench_ws_ina, bench_ws_vs_os)
+    lines = ["name,us_per_call,derived"]
+    lines += bench_tables.run()
+    lines += bench_ws_ina.run()
+    lines += bench_ws_vs_os.run()
+    lines += bench_kernels.run()
+    lines += bench_collectives.run()
+    try:
+        from benchmarks import roofline
+        if os.path.exists("results/dryrun_singlepod.json"):
+            lines += roofline.run()
+        else:
+            lines.append("roofline_skipped,0,run_launch/dryrun_first")
+    except Exception as e:                                  # noqa: BLE001
+        lines.append(f"roofline_error,0,{type(e).__name__}")
+    print("\n".join(lines))
+
+
+if __name__ == '__main__':
+    main()

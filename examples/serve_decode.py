@@ -1,0 +1,21 @@
+"""Serve a small model with batched greedy decoding (INA-mode TP).
+
+Run:  PYTHONPATH=src python examples/serve_decode.py
+"""
+import os
+if not os.environ.get("XLA_FLAGS"):
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+
+import subprocess
+import sys
+
+if __name__ == "__main__":
+    # The serving driver is the public entry point; this example invokes it
+    # the way a deployment would, on a 2x4 host mesh with INA enabled.
+    cmd = [sys.executable, "-m", "repro.launch.serve",
+           "--arch", "qwen2-1.5b", "--reduced", "--batch", "4",
+           "--prompt-len", "12", "--gen", "20", "--model-parallel", "4",
+           "--psum-mode", "ina"]
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    sys.exit(subprocess.call(cmd, env=env))

@@ -1,0 +1,71 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=64"
+import json, traceback
+from benchmarks.perf_iterations import hillclimb_mesh, measure
+
+mesh = hillclimb_mesh(tp=16, dp=4)
+CELLS = {
+  # paper-representative dense WS cell
+  "llama3-8b:train_4k": ([
+    ("baseline_xla",   {}, {"psum_mode": "xla_spmd"}, False),
+    ("ina_xla",        {}, {"psum_mode": "ina"}, False),
+    ("ina_bf16params", {"param_dtype": "bfloat16"}, {"psum_mode": "ina"}, False),
+    ("ina_bf16_rsseq", {"param_dtype": "bfloat16"},
+                       {"psum_mode": "ina", "rs_seq": True}, False),
+    ("bf16_rsseq_ring", {"param_dtype": "bfloat16"},
+                       {"psum_mode": "ina", "rs_seq": True,
+                        "sp_entry": True}, False),
+    ("paper_eject_inject_1L", {}, {"psum_mode": "eject_inject"}, True),
+    ("paper_ina_ring_1L",     {}, {"psum_mode": "ina_ring"}, True),
+  ]),
+  # most collective-bound cell (MoE EP)
+  "llama4-scout-17b-16e:train_4k": ([
+    ("baseline_xla",   {}, {"psum_mode": "xla_spmd"}, False),
+    ("ina_manual_ep",  {}, {"psum_mode": "ina"}, False),
+    ("ina_bf16params", {"param_dtype": "bfloat16"}, {"psum_mode": "ina"}, False),
+    ("ina_bf16_rsseq", {"param_dtype": "bfloat16"},
+                       {"psum_mode": "ina", "rs_seq": True}, False),
+    ("bf16_rsseq_cap1", {"param_dtype": "bfloat16",
+                         "__moe__": {"capacity_factor": 1.0}},
+                        {"psum_mode": "ina", "rs_seq": True}, False),
+  ]),
+  # worst roofline fraction (decode: FSDP param gathers per token)
+  "llama3-8b:decode_32k": ([
+    ("baseline_fsdp",  {}, {"psum_mode": "xla_spmd"}, False),
+    ("ina_manual",     {}, {"psum_mode": "ina"}, False),
+    ("bf16_params",    {"param_dtype": "bfloat16"}, {"psum_mode": "ina"}, False),
+  ]),
+  # memory-bound SSD (bonus cell)
+  "zamba2-2.7b:train_4k": ([
+    ("baseline",      {}, {"psum_mode": "xla_spmd"}, True),
+    ("bf16_scores",   {"__ssm__": {"scores_dtype": "bfloat16"}},
+                      {"psum_mode": "xla_spmd"}, True),
+    ("bf16_scores_chunk128", {"__ssm__": {"scores_dtype": "bfloat16",
+                                          "chunk": 128}},
+                      {"psum_mode": "xla_spmd"}, True),
+    ("bf16_all",      {"param_dtype": "bfloat16",
+                       "__ssm__": {"scores_dtype": "bfloat16"}},
+                      {"psum_mode": "ina"}, True),
+  ]),
+}
+
+out = {}
+for cell, variants in CELLS.items():
+    arch, shape = cell.split(":")
+    rows = []
+    for name, co, po, fast in variants:
+        try:
+            r = measure(arch, shape, mesh, dict(co), dict(po), fast=fast)
+            rows.append({"variant": name, "fast": fast,
+                         **{k: r[k] for k in ("compute_s","memory_s",
+                            "collective_s","dominant","step_s","wall_s")}})
+            print(f"RESULT {cell} {name:20s} comp={r['compute_s']:.3f} "
+                  f"mem={r['memory_s']:.3f} coll={r['collective_s']:.3f} "
+                  f"dom={r['dominant']} step~{r['step_s']:.2f}s "
+                  f"[{r['wall_s']}s]", flush=True)
+        except Exception as e:
+            traceback.print_exc()
+            print(f"FAILED {cell} {name}: {e}", flush=True)
+        out[cell] = rows
+        json.dump(out, open("results/hillclimb.json","w"), indent=1)
+print("HILLCLIMB_DONE")

@@ -1,0 +1,42 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=64"
+import json, traceback
+from benchmarks.perf_iterations import hillclimb_mesh, measure
+
+mesh = hillclimb_mesh(tp=16, dp=4)
+CELLS = {
+  "llama4-scout-17b-16e:train_4k": [
+    ("ina_manual_ep",  {}, {"psum_mode": "ina"}, False),
+    ("ina_bf16params", {"param_dtype": "bfloat16"}, {"psum_mode": "ina"}, False),
+    ("bf16_rsseq_ring", {"param_dtype": "bfloat16"},
+        {"psum_mode": "ina", "rs_seq": True, "sp_entry": True}, False),
+  ],
+  "llama3-8b:decode_32k": [
+    ("tp_only_params", {}, {"psum_mode": "xla_spmd",
+                            "serve_replicated_params": True}, False),
+    ("tp_only_bf16",   {"param_dtype": "bfloat16"},
+                       {"psum_mode": "xla_spmd",
+                        "serve_replicated_params": True}, False),
+  ],
+}
+out = json.load(open("results/hillclimb.json")) if \
+    os.path.exists("results/hillclimb.json") else {}
+for cell, variants in CELLS.items():
+    arch, shape = cell.split(":")
+    rows = out.get(cell, [])
+    for name, co, po, fast in variants:
+        try:
+            r = measure(arch, shape, mesh, dict(co), dict(po), fast=fast)
+            rows.append({"variant": name, "fast": fast,
+                         **{k: r[k] for k in ("compute_s","memory_s",
+                            "collective_s","dominant","step_s","wall_s")}})
+            print(f"RESULT {cell} {name:20s} comp={r['compute_s']:.3f} "
+                  f"mem={r['memory_s']:.3f} coll={r['collective_s']:.3f} "
+                  f"dom={r['dominant']} step~{r['step_s']:.2f}s "
+                  f"[{r['wall_s']}s]", flush=True)
+        except Exception as e:
+            traceback.print_exc()
+            print(f"FAILED {cell} {name}: {str(e)[:200]}", flush=True)
+        out[cell] = rows
+        json.dump(out, open("results/hillclimb.json","w"), indent=1)
+print("FIXUP_DONE")

@@ -1,0 +1,24 @@
+"""Architecture registry: ``--arch <id>`` resolves through ARCHS."""
+from __future__ import annotations
+
+from repro.configs.base import SHAPES, ModelConfig, ShapeConfig, shape_applicable
+from repro.configs.phi3_mini_3_8b import CONFIG as phi3_mini_3_8b
+from repro.configs.llama3_8b import CONFIG as llama3_8b
+from repro.configs.qwen3_14b import CONFIG as qwen3_14b
+from repro.configs.qwen2_1_5b import CONFIG as qwen2_1_5b
+from repro.configs.deepseek_v2_lite_16b import CONFIG as deepseek_v2_lite_16b
+from repro.configs.llama4_scout_17b_16e import CONFIG as llama4_scout_17b_16e
+from repro.configs.zamba2_2_7b import CONFIG as zamba2_2_7b
+from repro.configs.rwkv6_7b import CONFIG as rwkv6_7b
+from repro.configs.whisper_medium import CONFIG as whisper_medium
+from repro.configs.llama_3_2_vision_11b import CONFIG as llama_3_2_vision_11b
+
+ARCHS: dict[str, ModelConfig] = {
+    c.name: c for c in [
+        phi3_mini_3_8b, llama3_8b, qwen3_14b, qwen2_1_5b,
+        deepseek_v2_lite_16b, llama4_scout_17b_16e, zamba2_2_7b, rwkv6_7b,
+        whisper_medium, llama_3_2_vision_11b,
+    ]
+}
+
+__all__ = ["ARCHS", "SHAPES", "ModelConfig", "ShapeConfig", "shape_applicable"]

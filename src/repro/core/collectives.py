@@ -1,0 +1,196 @@
+"""INA as pod-scale collectives: accumulate-while-routing vs eject/inject.
+
+The paper's dichotomy (Fig. 4) maps exactly onto how a partial-sum
+all-reduce can be scheduled on a TPU ICI ring (DESIGN.md S2.1):
+
+* ``ring_psum_eject_inject``  — Fig. 4(a).  The *full* psum tensor is relayed
+  around the ring; at every stop it is "ejected" into the endpoint (added to
+  the local accumulator) and the received tensor is "re-injected" for the
+  next hop.  P-1 steps, each moving ``|x|`` bytes per link: per-link traffic
+  ``(P-1) * |x|``.
+
+* ``ring_reduce_scatter_ina`` — Fig. 4(b).  The tensor is chunked 1/P; each
+  hop *accumulates the local contribution into the moving chunk and forwards
+  it* — the add happens "in the network" (inside the step, fused with the
+  permute), never bouncing through an endpoint buffer.  P-1 steps, each
+  moving ``|x|/P``: per-link traffic ``(P-1)/P * |x|`` — a ~P x reduction,
+  the datacenter-scale version of the paper's result.
+
+* ``psum_ina``                — reduce-scatter + all-gather when the full
+  reduced tensor is needed (2(P-1)/P * |x| per link).
+
+``*_xla`` variants use XLA's native collectives (``psum_scatter`` /
+``psum``), which lower to the same in-network schedule but let the compiler
+fuse/overlap; the explicit ring variants keep the paper's algorithm visible
+in the HLO (collective-permute chains) for the roofline analysis.
+
+All functions must be called inside ``shard_map`` with ``axis_name`` bound.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Literal
+
+import jax
+import jax.numpy as jnp
+
+PsumMode = Literal["ina", "ina_ring", "eject_inject", "xla"]
+
+
+# --------------------------------------------------------------------------- #
+# Fig. 4(a): eject -> local add -> inject, hop by hop (full tensor each hop).
+# --------------------------------------------------------------------------- #
+def ring_psum_eject_inject(x: jax.Array, axis_name: str) -> jax.Array:
+    """Unchunked ring all-reduce: P-1 full-tensor hops with endpoint adds."""
+    p = jax.lax.axis_size(axis_name)
+    if p == 1:
+        return x
+    perm = [(i, (i + 1) % p) for i in range(p)]
+    acc = x
+    send = x
+    for _ in range(p - 1):
+        send = jax.lax.ppermute(send, axis_name, perm)   # inject -> next hop
+        acc = acc + send                                 # eject -> local add
+    return acc
+
+
+# --------------------------------------------------------------------------- #
+# Fig. 4(b): chunked ring reduce-scatter with in-flight accumulation.
+# --------------------------------------------------------------------------- #
+def ring_reduce_scatter_ina(x: jax.Array, axis_name: str,
+                            scatter_axis: int = 0) -> jax.Array:
+    """In-network accumulation: each hop adds its contribution to the moving
+    1/P chunk and forwards it.  Device ``i`` returns fully-reduced chunk ``i``.
+    """
+    p = jax.lax.axis_size(axis_name)
+    if p == 1:
+        return x
+    if x.shape[scatter_axis] % p != 0:
+        raise ValueError(
+            f"scatter axis {scatter_axis} ({x.shape[scatter_axis]}) "
+            f"not divisible by axis size {p}")
+    i = jax.lax.axis_index(axis_name)
+    c = x.shape[scatter_axis] // p
+    perm = [(j, (j + 1) % p) for j in range(p)]
+
+    def chunk(k):
+        k = jnp.mod(k, p)
+        return jax.lax.dynamic_slice_in_dim(x, k * c, c, axis=scatter_axis)
+
+    # Each step the moving chunk arrives from the ring predecessor, our local
+    # contribution is added (the INA add), and it is forwarded.  Seeded with
+    # chunk (i-1) so that after p-1 steps device i holds chunk i summed over
+    # every device (the moving chunk index decreases by one per hop).
+    carry = chunk(i - 1)
+    for s in range(p - 1):
+        carry = jax.lax.ppermute(carry, axis_name, perm)
+        carry = carry + chunk(i - 2 - s)   # in-network accumulation
+    return carry
+
+
+def ring_all_gather(x: jax.Array, axis_name: str, gather_axis: int = 0,
+                    ) -> jax.Array:
+    """Ring all-gather (P-1 hops of |x| each); inverse of the scatter."""
+    p = jax.lax.axis_size(axis_name)
+    if p == 1:
+        return x
+    i = jax.lax.axis_index(axis_name)
+    perm = [(j, (j + 1) % p) for j in range(p)]
+    c = x.shape[gather_axis]
+    out_shape = list(x.shape)
+    out_shape[gather_axis] = c * p
+    out = jnp.zeros(out_shape, x.dtype)
+
+    send = x
+    out = jax.lax.dynamic_update_slice_in_dim(
+        out, send, jnp.mod(i, p) * c, axis=gather_axis)
+    for s in range(p - 1):
+        send = jax.lax.ppermute(send, axis_name, perm)
+        # After s+1 forwards we are holding the chunk owned by (i - s - 1).
+        out = jax.lax.dynamic_update_slice_in_dim(
+            out, send, jnp.mod(i - s - 1, p) * c, axis=gather_axis)
+    return out
+
+
+def psum_ina(x: jax.Array, axis_name: str, scatter_axis: int = 0) -> jax.Array:
+    """Full all-reduce via INA: reduce-scatter (in-flight adds) + all-gather."""
+    rs = ring_reduce_scatter_ina(x, axis_name, scatter_axis)
+    return ring_all_gather(rs, axis_name, scatter_axis)
+
+
+# --------------------------------------------------------------------------- #
+# XLA-native fast paths (same in-network schedule, compiler-optimized).
+# --------------------------------------------------------------------------- #
+def _needs_f32_workaround(x: jax.Array) -> bool:
+    """XLA CPU's AllReducePromotion pass crashes on bf16 all-reduce/
+    reduce-scatter inside manual shard_map regions (``Invalid binary
+    instruction opcode copy``).  Upcast around the collective on CPU only;
+    TPU keeps bf16 on the wire.  The dry-run's measured collective bytes for
+    these sites are therefore f32 (2x the TPU bf16 bytes) — noted in
+    EXPERIMENTS.md."""
+    return x.dtype == jnp.bfloat16 and jax.default_backend() == "cpu"
+
+
+def psum_scatter_xla(x: jax.Array, axis_name: str, scatter_axis: int = 0,
+                     ) -> jax.Array:
+    if _needs_f32_workaround(x):
+        return jax.lax.psum_scatter(
+            x.astype(jnp.float32), axis_name, scatter_dimension=scatter_axis,
+            tiled=True).astype(x.dtype)
+    return jax.lax.psum_scatter(x, axis_name, scatter_dimension=scatter_axis,
+                                tiled=True)
+
+
+def psum_xla(x: jax.Array, axis_name: str) -> jax.Array:
+    if _needs_f32_workaround(x):
+        return jax.lax.psum(x.astype(jnp.float32), axis_name).astype(x.dtype)
+    return jax.lax.psum(x, axis_name)
+
+
+# --------------------------------------------------------------------------- #
+# Mode dispatch used by the tensor-parallel layers.
+# --------------------------------------------------------------------------- #
+def psum_with_mode(x: jax.Array, axis_name: str, mode: PsumMode,
+                   scatter_axis: int = 0) -> jax.Array:
+    """Fully-reduced psum under the selected accumulation strategy."""
+    if mode == "eject_inject":
+        return ring_psum_eject_inject(x, axis_name)
+    if mode == "ina_ring":
+        return psum_ina(x, axis_name, scatter_axis)
+    if mode in ("ina", "xla"):
+        return psum_xla(x, axis_name)
+    raise ValueError(f"unknown psum mode: {mode}")
+
+
+def reduce_scatter_with_mode(x: jax.Array, axis_name: str, mode: PsumMode,
+                             scatter_axis: int = 0) -> jax.Array:
+    """Reduce-scattered psum (output stays sharded on ``scatter_axis``)."""
+    if mode == "eject_inject":
+        # The baseline has no in-network reduction: full all-reduce, then the
+        # caller's shard is sliced out locally (the ejected copy).
+        full = ring_psum_eject_inject(x, axis_name)
+        p = jax.lax.axis_size(axis_name)
+        i = jax.lax.axis_index(axis_name)
+        c = x.shape[scatter_axis] // p
+        return jax.lax.dynamic_slice_in_dim(full, i * c, c, axis=scatter_axis)
+    if mode == "ina_ring":
+        return ring_reduce_scatter_ina(x, axis_name, scatter_axis)
+    if mode in ("ina", "xla"):
+        return psum_scatter_xla(x, axis_name, scatter_axis)
+    raise ValueError(f"unknown psum mode: {mode}")
+
+
+# --------------------------------------------------------------------------- #
+# Analytic per-link traffic (bytes) — used by the roofline cross-check.
+# --------------------------------------------------------------------------- #
+def per_link_bytes(mode: PsumMode, p: int, nbytes: int,
+                   need_full: bool = True) -> float:
+    """Bytes crossing each ring link per psum of an ``nbytes`` tensor."""
+    if p == 1:
+        return 0.0
+    if mode == "eject_inject":
+        return (p - 1) * nbytes
+    if mode in ("ina", "ina_ring", "xla"):
+        rs = (p - 1) / p * nbytes
+        return rs * 2 if need_full else rs
+    raise ValueError(mode)

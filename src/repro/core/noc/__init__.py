@@ -1,0 +1,17 @@
+"""Event-driven wormhole NoC simulator reproducing the paper's evaluation.
+
+The paper evaluates INA with a cycle-accurate C++ mesh simulator [22] plus the
+Orion-3.0 power model [24].  This package is a faithful Python port at packet
+granularity: XY-routed wormhole traversal with per-link occupancy reservation
+(contention + flit serialization are modeled cycle-exactly; flit-level credit
+stalls are folded into link occupancy), the paper's 4-cycle router / 1-cycle
+link / 128-bit flit configuration (Table III), and an event-count energy model
+with Orion-style per-component energies.
+"""
+from .router import NocConfig
+from .topology import Mesh, xy_route
+from .simulator import NocSim
+from .traffic import LayerResult, simulate_layer, simulate_network
+
+__all__ = ["NocConfig", "Mesh", "xy_route", "NocSim", "LayerResult",
+           "simulate_layer", "simulate_network"]

@@ -1,0 +1,160 @@
+"""Discrete-event wormhole mesh simulator with time-ordered link arbitration.
+
+Each directed link (and each node's per-VC injection/ejection port) is a
+resource with a busy-until time.  Packets are processed as events ordered by
+ready time (a heap), so arbitration between flows happens in *time* order —
+a late-issued gather packet cannot retroactively block an earlier relay
+packet of the next round, matching real router behaviour.  A packet of
+``flits`` flits holds each traversed link for ``flits`` cycles (wormhole
+serialization); the head flit pays ``router_cycles + link_cycles`` per hop
+plus contention wait; the tail arrives ``flits - 1`` cycles after the head.
+The two VCs of the paper's Table III are modeled as separate injection/
+ejection port resources (gather rides VC1, unicast/relay VC0).
+
+Energy is counted per event into an :class:`EnergyLedger` (Orion-style):
+router traversals (buffer write/read + crossbar) per flit per router
+(links + 1 routers per path), links per flit per link, NI crossings per flit,
+and packet (dis)assembly per endpoint.
+"""
+from __future__ import annotations
+
+import heapq
+import itertools
+from dataclasses import dataclass, field
+from typing import Callable, Optional
+
+from .router import EnergyLedger, NocConfig
+from .topology import links_of, xy_route
+
+Coord = tuple[int, int]
+
+
+@dataclass
+class _Packet:
+    src: Coord
+    dst: Coord
+    flits: int
+    vc: int
+    inject: bool
+    eject: bool
+    ina_hops: int
+    on_done: Optional[Callable[[int], None]]
+    links: list = field(default_factory=list)
+    stage: int = -1          # -1 = inject, 0..len(links)-1 = hop i, len = eject
+    head: int = 0
+
+
+class NocSim:
+    """Event-driven simulator; create, enqueue packets, then ``run()``."""
+
+    def __init__(self, cfg: NocConfig):
+        self.cfg = cfg
+        self.link_free: dict[tuple[Coord, Coord], int] = {}
+        self.port_free: dict[tuple[str, int, Coord], int] = {}
+        self.ledger = EnergyLedger()
+        self._heap: list = []
+        self._seq = itertools.count()
+        self.now = 0
+
+    # ------------------------------------------------------------------ #
+    def enqueue(self, t: int, src: Coord, dst: Coord, flits: int, *,
+                vc: int = 0, inject: bool = True, eject: bool = True,
+                ina_hops: int = 0,
+                on_done: Optional[Callable[[int], None]] = None) -> None:
+        """Schedule a packet to become ready at time ``t``."""
+        pkt = _Packet(src, dst, flits, vc, inject, eject, ina_hops, on_done)
+        pkt.links = links_of(xy_route(src, dst))
+        pkt.stage = -1 if inject else 0
+        pkt.head = t
+        # Energy that is path-determined (independent of contention):
+        self.ledger.flit_routers += flits * (len(pkt.links) + 1)
+        self.ledger.flit_links += flits * len(pkt.links)
+        self.ledger.packet_hops += len(pkt.links)
+        self.ledger.router_adds += ina_hops
+        if inject:
+            self.ledger.ni_flits += flits
+            self.ledger.packets_built += 1
+        if eject:
+            self.ledger.ni_flits += flits
+            self.ledger.packets_built += 1
+        self._push(t, pkt)
+
+    def _push(self, t: int, pkt: _Packet) -> None:
+        heapq.heappush(self._heap, (t, next(self._seq), pkt))
+
+    # ------------------------------------------------------------------ #
+    def run(self) -> int:
+        """Process all events; returns the makespan (last completion time)."""
+        cfg = self.cfg
+        makespan = 0
+        while self._heap:
+            t, _, pkt = heapq.heappop(self._heap)
+            self.now = max(self.now, t)
+
+            if pkt.stage == -1:                          # injection port
+                key = ("inj", pkt.vc, pkt.src)
+                free = self.port_free.get(key, 0)
+                if free > t:
+                    self._push(free, pkt)
+                    continue
+                self.port_free[key] = t + pkt.flits
+                pkt.head = t + cfg.ni_cycles
+                pkt.stage = 0
+                self._push(pkt.head, pkt)
+                continue
+
+            if pkt.stage < len(pkt.links):               # link hop
+                link = pkt.links[pkt.stage]
+                ready = pkt.head + cfg.router_cycles
+                free = self.link_free.get(link, 0)
+                if free > ready:
+                    pkt.head = free - cfg.router_cycles
+                    self._push(free, pkt)
+                    continue
+                self.link_free[link] = ready + pkt.flits
+                pkt.head = ready + cfg.link_cycles
+                pkt.stage += 1
+                self._push(pkt.head, pkt)
+                continue
+
+            # ejection (or in-router completion when eject=False)
+            if pkt.eject:
+                key = ("ej", pkt.vc, pkt.dst)
+                ready = pkt.head + cfg.router_cycles
+                free = self.port_free.get(key, 0)
+                if free > ready:
+                    pkt.head = free - cfg.router_cycles
+                    self._push(free, pkt)
+                    continue
+                self.port_free[key] = ready + pkt.flits
+                done = ready + cfg.ni_cycles + pkt.flits - 1
+            else:
+                done = pkt.head + pkt.flits - 1
+            makespan = max(makespan, done)
+            if pkt.on_done is not None:
+                pkt.on_done(done)
+        return makespan
+
+    # ------------------------------------------------------------------ #
+    def chain_eject_inject(self, t: int, chain: list[Coord], flits: int,
+                           on_done: Optional[Callable[[int], None]] = None,
+                           ) -> None:
+        """Fig. 4(a): psum relayed PE->PE, ejected/added/re-injected per stop.
+
+        ``on_done(t)`` fires when the accumulated psum rests in the tail PE.
+        """
+        cfg = self.cfg
+        hops = list(zip(chain[:-1], chain[1:]))
+
+        def launch(i: int, t_ready: int) -> None:
+            if i == len(hops):
+                if on_done:
+                    on_done(t_ready)
+                return
+            src, dst = hops[i]
+            self.ledger.pe_adds += 1
+            self.enqueue(t_ready, src, dst, flits, vc=0, inject=True,
+                         eject=True,
+                         on_done=lambda td: launch(i + 1, td + cfg.pe_add_cycles))
+
+        launch(0, t)

@@ -1,0 +1,42 @@
+"""2D-mesh topology and dimension-ordered (XY) routing."""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+
+@dataclass(frozen=True)
+class Mesh:
+    """An N x N 2D mesh.  Nodes are (x, y) with x = column, y = row."""
+
+    n: int
+
+    def node_id(self, x: int, y: int) -> int:
+        return y * self.n + x
+
+    def coords(self, nid: int) -> tuple[int, int]:
+        return nid % self.n, nid // self.n
+
+    @property
+    def num_nodes(self) -> int:
+        return self.n * self.n
+
+
+def xy_route(src: tuple[int, int], dst: tuple[int, int]) -> list[tuple[int, int]]:
+    """Dimension-ordered XY route: list of nodes visited, inclusive of endpoints."""
+    x, y = src
+    dx, dy = dst
+    path = [(x, y)]
+    step = 1 if dx > x else -1
+    while x != dx:
+        x += step
+        path.append((x, y))
+    step = 1 if dy > y else -1
+    while y != dy:
+        y += step
+        path.append((x, y))
+    return path
+
+
+def links_of(path: list[tuple[int, int]]) -> list[tuple[tuple[int, int], tuple[int, int]]]:
+    """Directed links traversed along a node path."""
+    return list(zip(path[:-1], path[1:]))

@@ -1,0 +1,260 @@
+"""WS(+/-INA) and OS dataflow traffic generation + per-layer simulation.
+
+Mapping (paper Fig. 3): filters are split into P# parts distributed among P#
+vertically-adjacent PEs of one column ("chains"); G = floor(N/P#) chains per
+column; each router hosts E PEs, so one chain keeps E filters resident.  Per
+accumulation round each chain finishes E output activations.
+
+Architecture (paper [12], "two-way streaming architecture"): weights/inputs
+are delivered over dedicated row streaming buses (cheap wires, no router
+traversal); the mesh NoC proper carries psum-accumulation and gather traffic.
+Hence the +/-INA comparison (Figs 7-9) is decided by NoC traffic and the
+WS-vs-OS comparison (Figs 10-12) additionally by streaming volume/overlap.
+
+Traffic per accumulation round:
+  * WS without INA (Fig. 4a): every chain runs an eject->add->inject unicast
+    relay over its P#-1 hops (2-3 flit packets, paper Table III); the final
+    results are collected to the column's memory port (``baseline_collection``
+    selects a shared column gather packet or per-chain result unicasts).
+  * WS with INA (Fig. 4b): one gather packet per column rides south,
+    accumulating each chain in-network (the INA block adds the local operand
+    inside the router pipeline) and collecting tails - relay traffic is gone.
+  * OS with gather [12]: psums accumulate locally (output-stationary), the
+    same gather collects finished outputs; but weights are *not* stationary:
+    weight (and input) streaming re-occurs continuously on the buses.
+
+Latency: accumulation rounds are simulated back-to-back in a window of
+``sim_rounds`` rounds through the event-driven NoC and extrapolated from the
+measured marginal round period (rounds are homogeneous); energy is exact
+(event counts scale linearly in rounds).
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+
+from ..ina_model import ConvLayer, p_num
+from .router import EnergyLedger, NocConfig
+from .simulator import NocSim
+
+MODES = ("ws_ina", "ws_noina", "os_gather")
+
+
+@dataclass
+class LayerResult:
+    name: str
+    mode: str
+    e_pes: int
+    rounds: int
+    fills: int
+    latency_cycles: float
+    fill_cycles: float
+    noc_energy_pj: float
+    stream_energy_pj: float
+
+    @property
+    def total_energy_pj(self) -> float:
+        return self.noc_energy_pj + self.stream_energy_pj
+
+    @property
+    def network_power(self) -> float:
+        """Average network power (energy per cycle; pJ/cycle ~ mW at 1 GHz)."""
+        return self.total_energy_pj / max(self.latency_cycles, 1.0)
+
+
+@dataclass
+class _Plan:
+    p: int                    # P#: PEs per chain
+    g: int                    # chains per column
+    rounds: int               # accumulation/gather rounds for the whole layer
+    fills: int                # weight (re)distribution phases
+    unicast_flits: int
+    gather_flits: int
+    weight_bits_per_router: int   # per fill
+
+
+def _plan(layer: ConvLayer, cfg: NocConfig, e_pes: int, mode: str) -> _Plan:
+    n = cfg.n
+    p = min(p_num(layer), n) if mode.startswith("ws") else 1
+    g = max(1, n // p)
+    if mode.startswith("ws"):
+        rounds = math.ceil((layer.F / (n * e_pes)) * (layer.O * layer.O / g))
+        fills = max(1, math.ceil(layer.F / (n * g * e_pes)))
+        w_bits_router = math.ceil(layer.weight_bits / p) * e_pes
+    else:  # OS: whole filters per PE; re-streamed continuously (no stationarity).
+        rounds = math.ceil(layer.F * layer.O * layer.O / (n * n * e_pes))
+        fills = 0
+        w_bits_router = layer.weight_bits * e_pes
+    # Gather packet sized by the results it collects: one per chain (G) per
+    # router-PE (E).  For P#=1 layers this reproduces Table III's static
+    # 3/5/9(/17)-flit gather packets (8 nodes x E results on the 8x8 mesh).
+    return _Plan(
+        p=p, g=g, rounds=rounds, fills=fills,
+        unicast_flits=cfg.unicast_flits(e_pes),
+        gather_flits=cfg.gather_flits(g * e_pes),
+        weight_bits_per_router=w_bits_router,
+    )
+
+
+# --------------------------------------------------------------------------- #
+# Streaming phases (two-way row buses; contention-free, analytic)
+# --------------------------------------------------------------------------- #
+def _fill_phase(plan: _Plan, cfg: NocConfig, ledger: EnergyLedger) -> float:
+    """One WS weight-distribution barrier: all routers filled over row buses."""
+    n = cfg.n
+    flits_per_router = cfg.payload_flits(plan.weight_bits_per_router)
+    # Each of the two bus directions serves n/2 routers, one flit per cycle.
+    cycles = (n // cfg.stream_buses_per_row) * flits_per_router
+    # Bus energy: every flit drives on average half its direction's segment.
+    ledger.stream_flit_segments += n * n * flits_per_router * max(1, n // 4)
+    return float(cycles)
+
+
+def _input_stream_round(plan: _Plan, layer: ConvLayer, cfg: NocConfig,
+                        ledger: EnergyLedger) -> float:
+    """Per-round input streaming (bus cycles per row); common to WS and OS."""
+    n = cfg.n
+    bits = layer.weight_bits / (plan.p * cfg.ws_input_reuse)
+    flits = bits / cfg.flit_bits
+    ledger.stream_flit_segments += flits * n           # broadcast spans the row
+    return flits / cfg.stream_buses_per_row
+
+
+def _os_weight_stream_round(plan: _Plan, layer: ConvLayer, cfg: NocConfig,
+                            ledger: EnergyLedger) -> float:
+    """Per-round OS weight re-streaming (bus cycles per row).
+
+    OS keeps outputs stationary, so weights flow continuously; a streamed
+    weight word is only reused ``os_weight_reuse``-wide (one assignment
+    wave), unlike WS where a distributed weight serves all O^2 pixels.
+    """
+    n = cfg.n
+    flits = layer.weight_bits / (cfg.flit_bits * cfg.os_weight_reuse)
+    ledger.stream_flit_segments += flits * n
+    return flits / cfg.os_stream_bw
+
+
+# --------------------------------------------------------------------------- #
+# Accumulation + gather rounds (event-driven simulation, window + extrapolate)
+# --------------------------------------------------------------------------- #
+def _sim_rounds_window(plan: _Plan, cfg: NocConfig, mode: str, window: int,
+                       e_pes: int = 1) -> tuple[float, EnergyLedger]:
+    """Simulate ``window`` back-to-back rounds; return (makespan, ledger)."""
+    sim = NocSim(cfg)
+    n = cfg.n
+    port_row = n - 1                       # per-column memory port at south edge
+
+    def launch_gather(x: int, t: int) -> None:
+        # Shared column gather packet ([12]) on VC1; with INA it also
+        # accumulates every chain in-network on its way south.
+        ina_hops = plan.g * (plan.p - 1) if mode == "ws_ina" else 0
+        sim.enqueue(t, (x, 0), (x, port_row), plan.gather_flits,
+                    vc=1, inject=True, eject=True, ina_hops=ina_hops)
+        # Result words entering the gather payload via the tails' NIs
+        # (identical in both modes).
+        sim.ledger.ni_flits += plan.gather_flits - 1
+        if mode == "ws_ina":
+            # Chain operands (one psum word per non-tail member) are
+            # deposited into the INA block through the local NI.
+            words = plan.g * (plan.p - 1) * e_pes
+            sim.ledger.ni_flits += words * cfg.gather_payload_bits / cfg.flit_bits
+
+    for _ in range(window):
+        for x in range(n):
+            if mode == "ws_noina" and plan.p > 1:
+                # Relay chains must finish before the gather departs (this
+                # serial dependency is exactly what INA removes).
+                pend = {"left": plan.g, "latest": 0}
+
+                def chain_done(td: int, pend=pend, x=x) -> None:
+                    pend["left"] -= 1
+                    pend["latest"] = max(pend["latest"], td)
+                    if pend["left"] == 0:
+                        if cfg.baseline_collection == "per_chain_unicast":
+                            for g in range(plan.g):
+                                tail = (x, g * plan.p + plan.p - 1)
+                                sim.enqueue(pend["latest"], tail, (x, port_row),
+                                            plan.unicast_flits, vc=1,
+                                            inject=True, eject=True)
+                        else:
+                            launch_gather(x, pend["latest"])
+
+                for g in range(plan.g):
+                    chain = [(x, g * plan.p + r) for r in range(plan.p)]
+                    sim.chain_eject_inject(0, chain, plan.unicast_flits,
+                                           on_done=chain_done)
+            else:
+                launch_gather(x, 0)
+    makespan = sim.run()
+    return float(makespan), sim.ledger
+
+
+def _accum_phase(plan: _Plan, cfg: NocConfig, mode: str,
+                 sim_rounds: int, e_pes: int) -> tuple[float, EnergyLedger]:
+    rounds = plan.rounds
+    if rounds <= 0:
+        return 0.0, EnergyLedger()
+    w_big = min(rounds, sim_rounds)
+    t_big, led_big = _sim_rounds_window(plan, cfg, mode, w_big, e_pes)
+    if rounds <= w_big:
+        return t_big, led_big
+    w_small = max(1, w_big // 2)
+    t_small, _ = _sim_rounds_window(plan, cfg, mode, w_small, e_pes)
+    marginal = (t_big - t_small) / (w_big - w_small)
+    return t_big + (rounds - w_big) * marginal, led_big.scaled(rounds / w_big)
+
+
+# --------------------------------------------------------------------------- #
+def simulate_layer(layer: ConvLayer, mode: str, cfg: NocConfig = NocConfig(),
+                   e_pes: int = 1, sim_rounds: int = 32) -> LayerResult:
+    """Simulate one CONV layer under a dataflow mode; return latency/energy."""
+    assert mode in MODES, mode
+    plan = _plan(layer, cfg, e_pes, mode)
+    stream_ledger = EnergyLedger()
+
+    noc_cycles, noc_ledger = _accum_phase(plan, cfg, mode, sim_rounds, e_pes)
+
+    # Per-round input streaming paces the steady state together with the NoC
+    # (whichever is slower); its energy scales with rounds.
+    in_round = _input_stream_round(plan, layer, cfg, stream_ledger)
+    stream_ledger.stream_flit_segments *= max(plan.rounds, 1)
+
+    if mode.startswith("ws"):
+        # Weight barrier: distribution must finish before MACs/psums start.
+        fill_cycles = sum(_fill_phase(plan, cfg, stream_ledger)
+                          for _ in range(plan.fills))
+        latency = fill_cycles + max(noc_cycles, in_round * plan.rounds)
+    else:
+        # OS overlaps weight+input distribution with execution (paper SIV.B):
+        # the layer is paced by the slower of streaming and the gather NoC.
+        tmp = EnergyLedger()
+        w_round = _os_weight_stream_round(plan, layer, cfg, tmp)
+        stream_ledger.stream_flit_segments += tmp.stream_flit_segments * plan.rounds
+        fill_cycles = (w_round + in_round) * plan.rounds
+        latency = max(fill_cycles, noc_cycles)
+
+    return LayerResult(
+        name=layer.name, mode=mode, e_pes=e_pes,
+        rounds=plan.rounds, fills=plan.fills,
+        latency_cycles=latency, fill_cycles=fill_cycles,
+        noc_energy_pj=noc_ledger.network_energy_pj(cfg),
+        stream_energy_pj=stream_ledger.energy_pj(cfg),
+    )
+
+
+def simulate_network(layers: list[ConvLayer], mode: str,
+                     cfg: NocConfig = NocConfig(), e_pes: int = 1,
+                     sim_rounds: int = 32) -> dict:
+    """Whole-network totals (layers execute back-to-back, as in the paper)."""
+    results = [simulate_layer(l, mode, cfg, e_pes, sim_rounds) for l in layers]
+    latency = sum(r.latency_cycles for r in results)
+    noc_e = sum(r.noc_energy_pj for r in results)
+    stream_e = sum(r.stream_energy_pj for r in results)
+    return {
+        "mode": mode, "e_pes": e_pes, "layers": results,
+        "latency_cycles": latency,
+        "noc_energy_pj": noc_e,
+        "stream_energy_pj": stream_e,
+        "total_energy_pj": noc_e + stream_e,
+        "network_power": (noc_e + stream_e) / max(latency, 1.0),
+    }

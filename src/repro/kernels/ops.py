@@ -1,0 +1,49 @@
+"""Dispatching wrappers: Pallas kernel on TPU, jnp reference elsewhere.
+
+The framework's model code is pure JAX so the 512-device CPU dry-run can
+compile it; these ops are the drop-in accelerated paths for real TPU runs
+(``use_pallas=True``) and are validated against ref.py in interpret mode.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.ina_matmul import ina_matmul
+from repro.kernels.wkv6 import wkv6
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def matmul(x: jax.Array, w: jax.Array, *, use_pallas: bool | None = None,
+           interpret: bool = False, **blocks) -> jax.Array:
+    if use_pallas is None:
+        use_pallas = _on_tpu()
+    if use_pallas or interpret:
+        return ina_matmul(x, w, interpret=interpret or not _on_tpu(), **blocks)
+    return ref.matmul_ref(x, w)
+
+
+def attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+              causal: bool = True, use_pallas: bool | None = None,
+              interpret: bool = False, **blocks) -> jax.Array:
+    if use_pallas is None:
+        use_pallas = _on_tpu()
+    if use_pallas or interpret:
+        return flash_attention(q, k, v, causal=causal,
+                               interpret=interpret or not _on_tpu(), **blocks)
+    return ref.attention_ref(q, k, v, causal=causal)
+
+
+def wkv(r, k, v, logw, u, *, use_pallas: bool | None = None,
+        interpret: bool = False, **kw) -> jax.Array:
+    if use_pallas is None:
+        use_pallas = _on_tpu()
+    if use_pallas or interpret:
+        return wkv6(r, k, v, logw, u, interpret=interpret or not _on_tpu(),
+                    **kw)
+    return ref.wkv6_ref(r, k, v, logw, u)

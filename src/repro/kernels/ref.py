@@ -1,0 +1,75 @@
+"""Pure-jnp oracles for every kernel + the eject/inject matmul baseline."""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def matmul_ref(x: jax.Array, w: jax.Array) -> jax.Array:
+    return jnp.dot(x.astype(jnp.float32), w.astype(jnp.float32)
+                   ).astype(x.dtype)
+
+
+def matmul_eject_inject(x: jax.Array, w: jax.Array, bk: int = 512,
+                        ) -> jax.Array:
+    """The paper's Fig. 4(a) baseline at chip level: each K-block partial product
+    is materialized (ejected to HBM) and re-read to accumulate.  Numerically
+    identical to the INA kernel; its cost model moves (K/bk) x M x N x 4 B of
+    extra HBM traffic — the contrast measured in benchmarks/bench_kernels.py.
+    """
+    m, k = x.shape
+    bk = min(bk, k)
+    nk = k // bk
+    partials = jnp.stack([
+        jnp.dot(x[:, i * bk:(i + 1) * bk].astype(jnp.float32),
+                w[i * bk:(i + 1) * bk].astype(jnp.float32))
+        for i in range(nk)])
+    if k % bk:
+        partials = jnp.concatenate(
+            [partials, jnp.dot(x[:, nk * bk:].astype(jnp.float32),
+                               w[nk * bk:].astype(jnp.float32))[None]])
+    # optimization barrier = the HBM round-trip (prevents re-fusion)
+    partials = jax.lax.optimization_barrier(partials)
+    return partials.sum(0).astype(x.dtype)
+
+
+def attention_ref(q: jax.Array, k: jax.Array, v: jax.Array,
+                  causal: bool = True) -> jax.Array:
+    """q/k/v: [BH, S, D]."""
+    scale = 1.0 / math.sqrt(q.shape[-1])
+    s = jnp.einsum("bqd,bkd->bqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    if causal:
+        sq, sk = q.shape[1], k.shape[1]
+        mask = jnp.arange(sq)[:, None] >= jnp.arange(sk)[None, :]
+        s = jnp.where(mask[None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bqk,bkd->bqd", p, v.astype(jnp.float32)
+                      ).astype(q.dtype)
+
+
+def wkv6_ref(r, k, v, logw, u):
+    """Step-by-step WKV6 recurrence (the ground-truth semantics).
+
+    r/k/v/logw: [BH, S, hd]; u: [BH, hd].
+    """
+    rf, kf, vf = (t.astype(jnp.float32) for t in (r, k, v))
+    wf = jnp.exp(logw.astype(jnp.float32))
+    uf = u.astype(jnp.float32)
+
+    def step(state, xs):
+        rt, kt, vt, wt = xs                      # [BH, hd]
+        kv = kt[:, :, None] * vt[:, None, :]     # [BH, hd, hd]
+        y = jnp.einsum("bc,bcd->bd", rt, state) \
+            + jnp.einsum("bc,bc,bc,bd->bd", rt, uf, kt, vt)
+        state = state * wt[:, :, None] + kv
+        return state, y
+
+    bh, s, hd = r.shape
+    state0 = jnp.zeros((bh, hd, hd), jnp.float32)
+    xs = (rf.swapaxes(0, 1), kf.swapaxes(0, 1), vf.swapaxes(0, 1),
+          wf.swapaxes(0, 1))
+    _, ys = jax.lax.scan(step, state0, xs)
+    return ys.swapaxes(0, 1).astype(r.dtype)

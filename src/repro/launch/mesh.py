@@ -1,0 +1,24 @@
+"""Production mesh construction (single-pod 16x16, multi-pod 2x16x16).
+
+A function, not a module-level constant: importing this module never touches
+jax device state (the dry-run sets XLA_FLAGS before first jax init).
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import AxisType
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes,
+                         axis_types=(AxisType.Auto,) * len(axes))
+
+
+def make_host_mesh(model_parallel: int = 1):
+    """Mesh over whatever devices exist (CPU smoke / small examples)."""
+    n = len(jax.devices())
+    mp = max(1, min(model_parallel, n))
+    return jax.make_mesh((n // mp, mp), ("data", "model"),
+                         axis_types=(AxisType.Auto, AxisType.Auto))

@@ -1,0 +1,3 @@
+from .api import get_model
+
+__all__ = ["get_model"]

@@ -1,0 +1,183 @@
+"""Zamba2: Mamba2 backbone with a weight-shared attention+MLP block.
+
+The shared block (one set of weights) is invoked every ``shared_attn_every``
+layers on concat(hidden, original_embedding) (2*d_model input, per the Zamba
+papers), with per-invocation input-norm parameters.  Execution is an outer
+scan over groups of ``shared_attn_every`` Mamba2 layers + one shared-block
+invocation, so the dry-run HLO stays one-group sized.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+from repro.models import ssm as S
+from repro.models.transformer import _dtype, remat_policy
+from repro.parallel.tp import ParallelCtx, col_linear, constrain_acts, row_linear
+
+
+def _group_count(cfg: ModelConfig) -> int:
+    assert cfg.n_layers % cfg.shared_attn_every == 0
+    return cfg.n_layers // cfg.shared_attn_every
+
+
+def init(cfg: ModelConfig, key) -> dict:
+    g = _group_count(cfg)
+    keys = jax.random.split(key, cfg.n_layers + 4)
+    mamba_layers = []
+    for i in range(cfg.n_layers):
+        mamba_layers.append({
+            "ln": jnp.ones((cfg.d_model,)),
+            "mamba": S.init_mamba2(keys[i], cfg),
+        })
+    stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *mamba_layers)
+    # regroup leading dim [L] -> [G, per]
+    per = cfg.shared_attn_every
+    stacked = jax.tree.map(
+        lambda a: a.reshape(g, per, *a.shape[1:]), stacked)
+
+    hd = cfg.d_model * 2 // cfg.shared_attn_heads   # shared block head dim
+    k1, k2 = jax.random.split(keys[-4])
+    shared = {
+        "attn": L.init_attn(k1, 2 * cfg.d_model, cfg.shared_attn_heads,
+                            cfg.shared_attn_heads, hd),
+        "wo_down": L.dense_init(k2, (2 * cfg.d_model, cfg.d_model)),
+        "mlp": L.init_mlp(keys[-3], 2 * cfg.d_model, cfg.shared_attn_d_ff),
+        "mlp_down": L.dense_init(keys[-2], (2 * cfg.d_model, cfg.d_model)),
+    }
+    return {
+        "embed": L.dense_init(keys[-1], (cfg.vocab, cfg.d_model)),
+        "groups": stacked,
+        "inv_norms": jnp.ones((g, 2 * cfg.d_model)),   # per-invocation norm
+        "shared": shared,
+        "ln_f": jnp.ones((cfg.d_model,)),
+    }
+
+
+def shared_block(sp: dict, x: jax.Array, x0: jax.Array, inv_norm, cfg,
+                 cos, sin, pctx, cache=None, pos=None):
+    """x, x0: [B,S,D].  Returns (delta [B,S,D], new kv cache or None)."""
+    h2 = jnp.concatenate([x, x0], axis=-1)
+    h2 = L.rms_norm(h2, inv_norm, cfg.norm_eps)
+    heads = cfg.shared_attn_heads
+    hd = 2 * cfg.d_model // heads
+    b, s, _ = h2.shape
+    if cache is None:
+        q, k, v = L.attn_qkv(sp["attn"], h2, heads, heads, hd, cos, sin,
+                             cfg.norm_eps, pctx)
+        o = L.attention(q, k, v, causal=True, chunk=cfg.attn_chunk,
+                        unroll=cfg.scan_unroll)
+        new_cache = None
+    else:
+        q, k, v = L.attn_qkv(sp["attn"], h2, heads, heads, hd, cos, sin,
+                             cfg.norm_eps, pctx)
+        ck = jax.lax.dynamic_update_slice(cache["k"], k.astype(cache["k"].dtype),
+                                          (0, pos, 0, 0))
+        cv = jax.lax.dynamic_update_slice(cache["v"], v.astype(cache["v"].dtype),
+                                          (0, pos, 0, 0))
+        o = L.attn_full(q, ck.astype(q.dtype), cv.astype(q.dtype), causal=False)
+        new_cache = {"k": ck, "v": cv}
+    o = row_linear(o.reshape(b, s, heads * hd), sp["attn"]["wo"], pctx)
+    attn_out = o @ sp["wo_down"].astype(o.dtype)          # 2D -> D
+    mlp_out = L.mlp_block(sp["mlp"], h2, pctx) @ sp["mlp_down"].astype(x.dtype)
+    return attn_out + mlp_out, new_cache
+
+
+def group_fwd(gp, inv_norm, x, x0, shared, cfg, cos, sin, pctx):
+    """One group: shared-attn invocation + ``per`` Mamba2 layers."""
+    delta, _ = shared_block(shared, x, x0, inv_norm, cfg, cos, sin, pctx)
+    x = x + delta
+
+    def body(carry, lp):
+        h = L.rms_norm(carry, lp["ln"], cfg.norm_eps)
+        y, _, _ = S.mamba2_block(lp["mamba"], h, cfg, pctx)
+        return constrain_acts(carry + y, pctx), None
+
+    x, _ = jax.lax.scan(body, x, gp, unroll=True if cfg.scan_unroll else 1)
+    return x
+
+
+def hidden_states(params, cfg: ModelConfig, tokens, pctx=None):
+    x = L.embed(params["embed"], tokens, _dtype(cfg))
+    x0 = x
+    s = tokens.shape[1]
+    hd = 2 * cfg.d_model // cfg.shared_attn_heads
+    cos, sin = L.rope_cos_sin(jnp.arange(s), hd, cfg.rope_theta)
+
+    def body(carry, g):
+        gp, inv_norm = g
+        return group_fwd(gp, inv_norm, carry, x0, params["shared"], cfg,
+                         cos, sin, pctx), None
+
+    x = constrain_acts(x, pctx)
+    x, _ = jax.lax.scan(jax.checkpoint(body, policy=remat_policy(cfg)),
+                        x, (params["groups"], params["inv_norms"]),
+                        unroll=True if cfg.scan_unroll else 1)
+    return L.rms_norm(x, params["ln_f"], cfg.norm_eps)
+
+
+def forward(params, cfg, batch, pctx=None):
+    x = hidden_states(params, cfg, batch["tokens"], pctx)
+    return L.logits_head(x, params["embed"].T, pctx)   # tied embeddings
+
+
+def loss(params, cfg, batch, pctx=None):
+    return L.xent_loss(forward(params, cfg, batch, pctx), batch["labels"])
+
+
+# --------------------------------------------------------------------------- #
+# decode: Mamba2 states + conv tails per layer; KV cache per shared invocation
+# --------------------------------------------------------------------------- #
+def init_cache(cfg: ModelConfig, batch: int, max_seq: int) -> dict:
+    g = _group_count(cfg)
+    per = cfg.shared_attn_every
+    d_inner, h, n, hd, ck = S.mamba2_dims(cfg)
+    heads = cfg.shared_attn_heads
+    shd = 2 * cfg.d_model // heads
+    conv_dim = d_inner + 2 * n
+    dt = _dtype(cfg)
+    return {
+        "ssm": jnp.zeros((g, per, batch, h, hd, n), jnp.float32),
+        "conv": jnp.zeros((g, per, batch, ck - 1, conv_dim), dt),
+        "k": jnp.zeros((g, batch, max_seq, heads, shd), dt),
+        "v": jnp.zeros((g, batch, max_seq, heads, shd), dt),
+    }
+
+
+def decode_step(params, cfg: ModelConfig, batch, cache, pctx=None):
+    tokens, pos = batch["tokens"], batch["pos"]
+    x = L.embed(params["embed"], tokens, _dtype(cfg))
+    x0 = x
+    hd = 2 * cfg.d_model // cfg.shared_attn_heads
+    cos, sin = L.rope_cos_sin(pos[None], hd, cfg.rope_theta)
+
+    def gbody(x, g):
+        gp, inv_norm, ssm, conv, k, v = g
+        delta, kv = shared_block(params["shared"], x, x0, inv_norm, cfg,
+                                 cos, sin, pctx, cache={"k": k, "v": v},
+                                 pos=pos)
+        x = x + delta
+
+        def lbody(carry, lp_state):
+            lp, st, cv = lp_state
+            h = L.rms_norm(carry, lp["ln"], cfg.norm_eps)
+            y, st, cv = S.mamba2_block(lp["mamba"], h, cfg, pctx,
+                                       state=st, conv_prev=cv,
+                                       single_step=True)
+            return carry + y, (st, cv)
+
+        x, (ssm, conv) = jax.lax.scan(lbody, x, (gp, ssm, conv),
+                                      unroll=True if cfg.scan_unroll else 1)
+        return x, (ssm, conv, kv["k"], kv["v"])
+
+    x, (ssm, conv, k, v) = jax.lax.scan(
+        gbody, x, (params["groups"], params["inv_norms"], cache["ssm"],
+                   cache["conv"], cache["k"], cache["v"]),
+        unroll=True if cfg.scan_unroll else 1)
+    x = L.rms_norm(x, params["ln_f"], cfg.norm_eps)
+    logits = L.logits_head(x, params["embed"].T, pctx)
+    return logits, {"ssm": ssm, "conv": conv, "k": k, "v": v}

@@ -1,0 +1,266 @@
+"""Shared layer library: norms, RoPE, attention (full/chunked/decode), MLP.
+
+Pure JAX, pytree (nested-dict) parameters.  Tensor-parallel matmuls route
+through :mod:`repro.parallel.tp` so the paper's INA toggle applies uniformly.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.parallel.tp import ParallelCtx, col_linear, row_linear
+
+# --------------------------------------------------------------------------- #
+# init helpers
+# --------------------------------------------------------------------------- #
+def dense_init(key, shape, in_dim: Optional[int] = None, dtype=jnp.float32):
+    in_dim = in_dim if in_dim is not None else shape[0]
+    scale = 1.0 / math.sqrt(max(in_dim, 1))
+    return jax.random.normal(key, shape, dtype) * scale
+
+
+# --------------------------------------------------------------------------- #
+# norms
+# --------------------------------------------------------------------------- #
+def rms_norm(x: jax.Array, w: jax.Array, eps: float = 1e-5) -> jax.Array:
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    out = x32 * jax.lax.rsqrt(var + eps)
+    return (out * w.astype(jnp.float32)).astype(x.dtype)
+
+
+def layer_norm(x: jax.Array, w: jax.Array, b: jax.Array,
+               eps: float = 1e-5) -> jax.Array:
+    x32 = x.astype(jnp.float32)
+    mu = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.var(x32, axis=-1, keepdims=True)
+    out = (x32 - mu) * jax.lax.rsqrt(var + eps)
+    return (out * w.astype(jnp.float32) + b.astype(jnp.float32)).astype(x.dtype)
+
+
+# --------------------------------------------------------------------------- #
+# RoPE
+# --------------------------------------------------------------------------- #
+def rope_cos_sin(positions: jax.Array, head_dim: int, theta: float):
+    """positions [S] -> (cos, sin) each [S, head_dim/2], float32."""
+    inv = 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32)
+                           / head_dim))
+    ang = positions.astype(jnp.float32)[:, None] * inv[None, :]
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x: jax.Array, cos: jax.Array, sin: jax.Array) -> jax.Array:
+    """x: [B, S, H, D]; cos/sin: [S, D/2] (llama-style rotate-half pairs)."""
+    d2 = x.shape[-1] // 2
+    x1, x2 = x[..., :d2], x[..., d2:]
+    c = cos[None, :, None, :].astype(jnp.float32)
+    s = sin[None, :, None, :].astype(jnp.float32)
+    x1f, x2f = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    return jnp.concatenate([x1f * c - x2f * s, x1f * s + x2f * c],
+                           axis=-1).astype(x.dtype)
+
+
+# --------------------------------------------------------------------------- #
+# attention cores
+# --------------------------------------------------------------------------- #
+def _expand_kv(k: jax.Array, n_heads: int) -> jax.Array:
+    """GQA: repeat KV heads to match query heads. k: [B, S, K, D]."""
+    kv_heads = k.shape[2]
+    if kv_heads == n_heads:
+        return k
+    reps = n_heads // kv_heads
+    return jnp.repeat(k, reps, axis=2)
+
+
+def attn_full(q: jax.Array, k: jax.Array, v: jax.Array, *, causal: bool,
+              q_offset: int | jax.Array = 0) -> jax.Array:
+    """Exact attention. q: [B,Sq,H,D], k/v: [B,Sk,K,D] -> [B,Sq,H,D].
+
+    GQA via grouped einsum — KV heads are never materialized at H width, so
+    a seq- or head-sharded KV cache is consumed in place (repeating KV used
+    to force GSPMD to re-gather the whole cache per layer at decode).
+    """
+    b, sq, h, d = q.shape
+    kv = k.shape[2]
+    g = h // kv
+    dv = v.shape[-1]
+    scale = 1.0 / math.sqrt(d)
+    qg = q.reshape(b, sq, kv, g, d)
+    scores = jnp.einsum("bqkgd,bskd->bkgqs", qg, k).astype(jnp.float32) * scale
+    if causal:
+        qp = jnp.arange(sq) + q_offset
+        kp = jnp.arange(k.shape[1])
+        mask = qp[:, None] >= kp[None, :]
+        scores = jnp.where(mask[None, None, None], scores, -1e30)
+    p = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bkgqs,bskd->bqkgd", p, v)
+    return out.reshape(b, sq, h, dv)
+
+
+def attn_chunked(q: jax.Array, k: jax.Array, v: jax.Array, *, chunk: int,
+                 causal: bool, q_offset: int | jax.Array = 0,
+                 unroll: bool = False) -> jax.Array:
+    """Memory-efficient attention: online softmax over KV chunks.
+
+    Never materializes the [Sq, Sk] score matrix; peak extra memory is
+    [B, H, Sq, chunk].  This is the pure-JAX twin of the Pallas flash kernel
+    (kernels/flash_attention.py) and is what the dry-run lowers (the CPU
+    backend cannot compile TPU Pallas).
+    """
+    b, sq, h, d = q.shape
+    sk = k.shape[1]
+    if sk % chunk != 0:
+        return attn_full(q, k, v, causal=causal, q_offset=q_offset)
+    k, v = _expand_kv(k, h), _expand_kv(v, h)
+    dv = v.shape[-1]                      # MLA: v head dim != qk head dim
+    nchunks = sk // chunk
+    kc = k.reshape(b, nchunks, chunk, h, d).transpose(1, 0, 2, 3, 4)
+    vc = v.reshape(b, nchunks, chunk, h, dv).transpose(1, 0, 2, 3, 4)
+    scale = 1.0 / math.sqrt(d)
+    qp = jnp.arange(sq) + q_offset
+
+    def step(carry, inputs):
+        m, l, acc = carry
+        idx, kb, vb = inputs
+        s = jnp.einsum("bqhd,bkhd->bhqk", q, kb).astype(jnp.float32) * scale
+        if causal:
+            kp = idx * chunk + jnp.arange(chunk)
+            mask = qp[:, None] >= kp[None, :]
+            s = jnp.where(mask[None, None], s, -1e30)
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        alpha = jnp.exp(m - m_new)
+        p = jnp.exp(s - m_new[..., None])
+        l_new = l * alpha + p.sum(axis=-1)
+        acc_new = acc * alpha[..., None] + jnp.einsum(
+            "bhqk,bkhd->bhqd", p.astype(q.dtype), vb).astype(jnp.float32)
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((b, h, sq), -1e30, jnp.float32)
+    l0 = jnp.zeros((b, h, sq), jnp.float32)
+    a0 = jnp.zeros((b, h, sq, dv), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(
+        step, (m0, l0, a0), (jnp.arange(nchunks), kc, vc),
+        unroll=True if unroll else 1)
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return out.transpose(0, 2, 1, 3).astype(q.dtype)
+
+
+def attention(q, k, v, *, causal: bool, chunk: int = 0,
+              q_offset: int | jax.Array = 0,
+              unroll: bool = False) -> jax.Array:
+    if chunk and k.shape[1] > chunk and q.shape[1] > 1:
+        return attn_chunked(q, k, v, chunk=chunk, causal=causal,
+                            q_offset=q_offset, unroll=unroll)
+    return attn_full(q, k, v, causal=causal, q_offset=q_offset)
+
+
+# --------------------------------------------------------------------------- #
+# GQA attention block (params + forward), used by dense/moe/hybrid/encdec/vlm
+# --------------------------------------------------------------------------- #
+def init_attn(key, d_model: int, n_heads: int, n_kv: int, head_dim: int,
+              qk_norm: bool = False, qkv_bias: bool = False) -> dict:
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": dense_init(ks[0], (d_model, n_heads * head_dim)),
+        "wk": dense_init(ks[1], (d_model, n_kv * head_dim)),
+        "wv": dense_init(ks[2], (d_model, n_kv * head_dim)),
+        "wo": dense_init(ks[3], (n_heads * head_dim, d_model)),
+    }
+    if qkv_bias:
+        p["bq"] = jnp.zeros((n_heads * head_dim,))
+        p["bk"] = jnp.zeros((n_kv * head_dim,))
+        p["bv"] = jnp.zeros((n_kv * head_dim,))
+    if qk_norm:
+        p["q_norm"] = jnp.ones((head_dim,))
+        p["k_norm"] = jnp.ones((head_dim,))
+    return p
+
+
+def attn_qkv(p: dict, x: jax.Array, n_heads: int, n_kv: int, head_dim: int,
+             cos, sin, eps: float, pctx: Optional[ParallelCtx] = None):
+    """Project to q/k/v heads (+qk-norm, +rope). Returns q,k,v [B,S,H,D]."""
+    b, s, _ = x.shape
+    q = col_linear(x, p["wq"], pctx, p.get("bq")).reshape(b, s, n_heads, head_dim)
+    k = col_linear(x, p["wk"], pctx, p.get("bk")).reshape(b, s, n_kv, head_dim)
+    v = col_linear(x, p["wv"], pctx, p.get("bv")).reshape(b, s, n_kv, head_dim)
+    if "q_norm" in p:
+        q = rms_norm(q, p["q_norm"], eps)
+        k = rms_norm(k, p["k_norm"], eps)
+    if cos is not None:
+        q = apply_rope(q, cos, sin)
+        k = apply_rope(k, cos, sin)
+    return q, k, v
+
+
+def attn_block(p: dict, x: jax.Array, *, n_heads: int, n_kv: int,
+               head_dim: int, cos, sin, causal: bool = True, chunk: int = 0,
+               eps: float = 1e-5, pctx: Optional[ParallelCtx] = None,
+               unroll: bool = False) -> jax.Array:
+    b, s, _ = x.shape
+    q, k, v = attn_qkv(p, x, n_heads, n_kv, head_dim, cos, sin, eps, pctx)
+    o = attention(q, k, v, causal=causal, chunk=chunk, unroll=unroll)
+    return row_linear(o.reshape(b, s, n_heads * head_dim), p["wo"], pctx)
+
+
+def attn_block_decode(p: dict, x: jax.Array, cache_k, cache_v, pos, *,
+                      n_heads: int, n_kv: int, head_dim: int, cos, sin,
+                      eps: float = 1e-5, pctx: Optional[ParallelCtx] = None):
+    """Single-token decode with a KV cache [B, S, K, D]; returns (y, k, v)."""
+    b = x.shape[0]
+    q, k, v = attn_qkv(p, x, n_heads, n_kv, head_dim, cos, sin, eps, pctx)
+    ck = jax.lax.dynamic_update_slice(cache_k, k.astype(cache_k.dtype),
+                                      (0, pos, 0, 0))
+    cv = jax.lax.dynamic_update_slice(cache_v, v.astype(cache_v.dtype),
+                                      (0, pos, 0, 0))
+    o = attn_full(q, ck.astype(q.dtype), cv.astype(q.dtype), causal=False)
+    y = row_linear(o.reshape(b, 1, n_heads * head_dim), p["wo"], pctx)
+    return y, ck, cv
+
+
+# --------------------------------------------------------------------------- #
+# SwiGLU / GeLU MLP
+# --------------------------------------------------------------------------- #
+def init_mlp(key, d_model: int, d_ff: int, gated: bool = True) -> dict:
+    ks = jax.random.split(key, 3)
+    p = {"w_up": dense_init(ks[0], (d_model, d_ff)),
+         "w_down": dense_init(ks[1], (d_ff, d_model))}
+    if gated:
+        p["w_gate"] = dense_init(ks[2], (d_model, d_ff))
+    return p
+
+
+def mlp_block(p: dict, x: jax.Array,
+              pctx: Optional[ParallelCtx] = None) -> jax.Array:
+    up = col_linear(x, p["w_up"], pctx)
+    if "w_gate" in p:
+        h = jax.nn.silu(col_linear(x, p["w_gate"], pctx)) * up
+    else:
+        h = jax.nn.gelu(up)
+    return row_linear(h, p["w_down"], pctx)
+
+
+# --------------------------------------------------------------------------- #
+# embedding / logits / loss
+# --------------------------------------------------------------------------- #
+def embed(table: jax.Array, tokens: jax.Array, dtype) -> jax.Array:
+    return table.astype(dtype)[tokens]
+
+
+def logits_head(x: jax.Array, w: jax.Array,
+                pctx: Optional[ParallelCtx] = None) -> jax.Array:
+    return col_linear(x, w, pctx)   # vocab-sharded logits
+
+
+def xent_loss(logits: jax.Array, labels: jax.Array,
+              z_coef: float = 0.0) -> jax.Array:
+    """Mean next-token cross-entropy; logits [B,S,V], labels [B,S]."""
+    logits = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    loss = jnp.mean(lse - gold)
+    if z_coef:
+        loss = loss + z_coef * jnp.mean(jnp.square(lse))
+    return loss

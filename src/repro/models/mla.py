@@ -1,0 +1,257 @@
+"""DeepSeek-V2-Lite: Multi-head Latent Attention + MoE FFN.
+
+MLA compresses K/V through a low-rank latent (kv_lora_rank) with a split
+nope/rope head layout; the decode cache stores the compressed latent + the
+shared rope key (per DeepSeek-V2).  FFN layers are the shared MoE machinery
+from moe.py (64 routed top-6 + 2 shared experts for V2-Lite).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+from repro.models import moe as MOE
+from repro.models.transformer import _dtype, remat_policy
+from repro.parallel.tp import ParallelCtx, col_linear, constrain_acts, row_linear
+
+
+# --------------------------------------------------------------------------- #
+# params
+# --------------------------------------------------------------------------- #
+def init_mla_attn(key, cfg: ModelConfig) -> dict:
+    a = cfg.mla
+    d = cfg.d_model
+    h = cfg.n_heads
+    qk_dim = a.qk_nope_head_dim + a.qk_rope_head_dim
+    ks = jax.random.split(key, 6)
+    p = {
+        # Q path (V2-Lite: no q compression)
+        "wq": L.dense_init(ks[0], (d, h * qk_dim)),
+        # KV latent compression + shared rope key
+        "w_dkv": L.dense_init(ks[1], (d, a.kv_lora_rank + a.qk_rope_head_dim)),
+        "kv_norm": jnp.ones((a.kv_lora_rank,)),
+        # up-projections from the latent
+        "w_uk": L.dense_init(ks[2], (a.kv_lora_rank, h * a.qk_nope_head_dim)),
+        "w_uv": L.dense_init(ks[3], (a.kv_lora_rank, h * a.v_head_dim)),
+        "wo": L.dense_init(ks[4], (h * a.v_head_dim, d)),
+    }
+    return p
+
+
+def init_layer(key, cfg: ModelConfig, dense: bool = False) -> dict:
+    k1, k2 = jax.random.split(key)
+    return {
+        "ln1": jnp.ones((cfg.d_model,)),
+        "attn": init_mla_attn(k1, cfg),
+        "ln2": jnp.ones((cfg.d_model,)),
+        "mlp": (L.init_mlp(k2, cfg.d_model, cfg.d_ff) if dense
+                else MOE.init_moe_mlp(k2, cfg)),
+    }
+
+
+def init(cfg: ModelConfig, key) -> dict:
+    nd = cfg.moe.first_dense_layers
+    keys = jax.random.split(key, cfg.n_layers + 2)
+    params = {
+        "embed": L.dense_init(keys[-2], (cfg.vocab, cfg.d_model)),
+        "layers": jax.tree.map(
+            lambda *xs: jnp.stack(xs),
+            *[init_layer(keys[i], cfg) for i in range(nd, cfg.n_layers)]),
+        "ln_f": jnp.ones((cfg.d_model,)),
+        "lm_head": L.dense_init(keys[-1], (cfg.d_model, cfg.vocab),
+                                in_dim=cfg.d_model),
+    }
+    if nd:
+        params["dense_layers"] = jax.tree.map(
+            lambda *xs: jnp.stack(xs),
+            *[init_layer(keys[i], cfg, dense=True) for i in range(nd)])
+    return params
+
+
+# --------------------------------------------------------------------------- #
+# MLA attention
+# --------------------------------------------------------------------------- #
+def mla_qkv(p: dict, x: jax.Array, cfg: ModelConfig, cos, sin,
+            pctx: Optional[ParallelCtx]):
+    """Returns q, k [B,S,H,qk_dim] and v [B,S,H,v_dim]."""
+    a = cfg.mla
+    b, s, _ = x.shape
+    h = cfg.n_heads
+    qk_dim = a.qk_nope_head_dim + a.qk_rope_head_dim
+
+    q = col_linear(x, p["wq"], pctx).reshape(b, s, h, qk_dim)
+    q_nope, q_rope = jnp.split(q, [a.qk_nope_head_dim], axis=-1)
+    q_rope = L.apply_rope(q_rope, cos, sin)
+
+    ckv = col_linear(x, p["w_dkv"], pctx)          # [B,S,rank+rope]
+    latent, k_rope = jnp.split(ckv, [a.kv_lora_rank], axis=-1)
+    latent = L.rms_norm(latent, p["kv_norm"], cfg.norm_eps)
+    k_rope = L.apply_rope(k_rope[:, :, None, :], cos, sin)    # shared head
+
+    k_nope = col_linear(latent, p["w_uk"], pctx).reshape(
+        b, s, h, a.qk_nope_head_dim)
+    v = col_linear(latent, p["w_uv"], pctx).reshape(b, s, h, a.v_head_dim)
+
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+    k = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(k_rope, (b, s, h, a.qk_rope_head_dim))],
+        axis=-1)
+    return q, k, v
+
+
+def mla_block(p: dict, x: jax.Array, cfg: ModelConfig, cos, sin,
+              pctx: Optional[ParallelCtx]) -> jax.Array:
+    a = cfg.mla
+    b, s, _ = x.shape
+    q, k, v = mla_qkv(p, x, cfg, cos, sin, pctx)
+    o = L.attention(q, k, v, causal=True, chunk=cfg.attn_chunk,
+                    unroll=cfg.scan_unroll)
+    return row_linear(o.reshape(b, s, cfg.n_heads * a.v_head_dim), p["wo"],
+                      pctx)
+
+
+def layer_fwd(lp, x, cfg, cos, sin, pctx, dense=False):
+    x = x + mla_block(lp["attn"], L.rms_norm(x, lp["ln1"], cfg.norm_eps),
+                      cfg, cos, sin, pctx)
+    h = L.rms_norm(x, lp["ln2"], cfg.norm_eps)
+    if dense:
+        return constrain_acts(x + L.mlp_block(lp["mlp"], h, pctx), pctx), \
+            jnp.float32(0)
+    y, aux = MOE.moe_mlp(lp["mlp"], h, cfg, pctx)
+    return constrain_acts(x + y, pctx), aux
+
+
+def hidden_states(params, cfg: ModelConfig, tokens, pctx=None):
+    dt = _dtype(cfg)
+    x = L.embed(params["embed"], tokens, dt)
+    pos = jnp.arange(tokens.shape[1])
+    cos, sin = L.rope_cos_sin(pos, cfg.mla.qk_rope_head_dim, cfg.rope_theta)
+    aux_total = jnp.float32(0)
+
+    if "dense_layers" in params:
+        def dbody(carry, lp):
+            x, aux = carry
+            x, a = layer_fwd(lp, x, cfg, cos, sin, pctx, dense=True)
+            return (x, aux + a), None
+        (x, aux_total), _ = jax.lax.scan(
+            jax.checkpoint(dbody, policy=remat_policy(cfg)),
+            (x, aux_total), params["dense_layers"],
+            unroll=True if cfg.scan_unroll else 1)
+
+    def body(carry, lp):
+        x, aux = carry
+        x, a = layer_fwd(lp, x, cfg, cos, sin, pctx)
+        return (x, aux + a), None
+
+    (x, aux_total), _ = jax.lax.scan(
+        jax.checkpoint(body, policy=remat_policy(cfg)),
+        (x, aux_total), params["layers"],
+        unroll=True if cfg.scan_unroll else 1)
+    return L.rms_norm(x, params["ln_f"], cfg.norm_eps), aux_total
+
+
+def forward(params, cfg, batch, pctx=None):
+    x, _ = hidden_states(params, cfg, batch["tokens"], pctx)
+    return L.logits_head(x, params["lm_head"], pctx)
+
+
+def loss(params, cfg, batch, pctx=None):
+    x, aux = hidden_states(params, cfg, batch["tokens"], pctx)
+    return L.xent_loss(L.logits_head(x, params["lm_head"], pctx),
+                       batch["labels"]) + aux
+
+
+# --------------------------------------------------------------------------- #
+# decode: cache the compressed latent + shared rope key (MLA's memory win)
+# --------------------------------------------------------------------------- #
+def init_cache(cfg: ModelConfig, batch: int, max_seq: int) -> dict:
+    a = cfg.mla
+    dt = _dtype(cfg)
+    nd = cfg.moe.first_dense_layers
+    n_moe = cfg.n_layers - nd
+    mk = lambda n: {
+        "latent": jnp.zeros((n, batch, max_seq, a.kv_lora_rank), dt),
+        "k_rope": jnp.zeros((n, batch, max_seq, a.qk_rope_head_dim), dt),
+    }
+    cache = {"moe": mk(n_moe)}
+    if nd:
+        cache["dense"] = mk(nd)
+    return cache
+
+
+def _decode_attn(p, x, lat_c, kr_c, pos, cfg: ModelConfig, cos, sin, pctx):
+    a = cfg.mla
+    b = x.shape[0]
+    h = cfg.n_heads
+    q = col_linear(x, p["wq"], pctx).reshape(
+        b, 1, h, a.qk_nope_head_dim + a.qk_rope_head_dim)
+    q_nope, q_rope = jnp.split(q, [a.qk_nope_head_dim], axis=-1)
+    q_rope = L.apply_rope(q_rope, cos, sin)
+
+    ckv = col_linear(x, p["w_dkv"], pctx)
+    latent, k_rope = jnp.split(ckv, [a.kv_lora_rank], axis=-1)
+    latent = L.rms_norm(latent, p["kv_norm"], cfg.norm_eps)
+    k_rope = L.apply_rope(k_rope[:, :, None, :], cos, sin)[:, :, 0, :]
+
+    lat_c = jax.lax.dynamic_update_slice(lat_c, latent.astype(lat_c.dtype),
+                                         (0, pos, 0))
+    kr_c = jax.lax.dynamic_update_slice(kr_c, k_rope.astype(kr_c.dtype),
+                                        (0, pos, 0))
+
+    # expand cached latents for attention
+    k_nope = col_linear(lat_c.astype(x.dtype), p["w_uk"], pctx).reshape(
+        b, -1, h, a.qk_nope_head_dim)
+    v = col_linear(lat_c.astype(x.dtype), p["w_uv"], pctx).reshape(
+        b, -1, h, a.v_head_dim)
+    s_k = k_nope.shape[1]
+    k = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(kr_c.astype(x.dtype)[:, :, None, :],
+                                  (b, s_k, h, a.qk_rope_head_dim))], axis=-1)
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+    o = L.attn_full(q, k, v, causal=False)
+    y = row_linear(o.reshape(b, 1, h * a.v_head_dim), p["wo"], pctx)
+    return y, lat_c, kr_c
+
+
+def decode_step(params, cfg: ModelConfig, batch, cache, pctx=None):
+    dt = _dtype(cfg)
+    tokens, pos = batch["tokens"], batch["pos"]
+    x = L.embed(params["embed"], tokens, dt)
+    cos, sin = L.rope_cos_sin(pos[None], cfg.mla.qk_rope_head_dim,
+                              cfg.rope_theta)
+
+    def make_body(dense):
+        def body(x, lp_cache):
+            lp, lat_c, kr_c = lp_cache
+            h = L.rms_norm(x, lp["ln1"], cfg.norm_eps)
+            y, lat_c, kr_c = _decode_attn(lp["attn"], h, lat_c, kr_c, pos,
+                                          cfg, cos, sin, pctx)
+            x = x + y
+            h = L.rms_norm(x, lp["ln2"], cfg.norm_eps)
+            if dense:
+                x = x + L.mlp_block(lp["mlp"], h, pctx)
+            else:
+                y, _ = MOE.moe_mlp(lp["mlp"], h, cfg, pctx)
+                x = x + y
+            return x, (lat_c, kr_c)
+        return body
+
+    new_cache = dict(cache)
+    if "dense" in cache:
+        x, (lc, kc) = jax.lax.scan(
+            make_body(True), x,
+            (params["dense_layers"], cache["dense"]["latent"],
+             cache["dense"]["k_rope"]),
+            unroll=True if cfg.scan_unroll else 1)
+        new_cache["dense"] = {"latent": lc, "k_rope": kc}
+    x, (lc, kc) = jax.lax.scan(
+        make_body(False), x,
+        (params["layers"], cache["moe"]["latent"], cache["moe"]["k_rope"]),
+        unroll=True if cfg.scan_unroll else 1)
+    new_cache["moe"] = {"latent": lc, "k_rope": kc}
+    x = L.rms_norm(x, params["ln_f"], cfg.norm_eps)
+    return L.logits_head(x, params["lm_head"], pctx), new_cache

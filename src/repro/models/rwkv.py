@@ -1,0 +1,107 @@
+"""RWKV6 (Finch) language model: time-mix + channel-mix stacks."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+from repro.models import ssm as S
+from repro.models.transformer import _dtype, remat_policy
+from repro.parallel.tp import ParallelCtx, constrain_acts
+
+
+def init_layer(key, cfg: ModelConfig) -> dict:
+    k1, k2 = jax.random.split(key)
+    return {
+        "ln1": jnp.ones((cfg.d_model,)),
+        "tmix": S.init_rwkv_tmix(k1, cfg),
+        "ln2": jnp.ones((cfg.d_model,)),
+        "cmix": S.init_rwkv_cmix(k2, cfg),
+    }
+
+
+def init(cfg: ModelConfig, key) -> dict:
+    keys = jax.random.split(key, cfg.n_layers + 2)
+    return {
+        "embed": L.dense_init(keys[-2], (cfg.vocab, cfg.d_model)),
+        "ln_in": jnp.ones((cfg.d_model,)),
+        "layers": jax.tree.map(
+            lambda *xs: jnp.stack(xs),
+            *[init_layer(keys[i], cfg) for i in range(cfg.n_layers)]),
+        "ln_f": jnp.ones((cfg.d_model,)),
+        "lm_head": L.dense_init(keys[-1], (cfg.d_model, cfg.vocab),
+                                in_dim=cfg.d_model),
+    }
+
+
+def layer_fwd(lp, x, cfg, pctx, caches=None):
+    """caches: None (train/prefill from scratch) or dict for decode."""
+    if caches is None:
+        y, _, _ = S.rwkv_tmix(lp["tmix"], L.rms_norm(x, lp["ln1"], cfg.norm_eps),
+                              cfg, pctx)
+        x = x + y
+        y, _ = S.rwkv_cmix(lp["cmix"], L.rms_norm(x, lp["ln2"], cfg.norm_eps),
+                           cfg, pctx)
+        return constrain_acts(x + y, pctx), None
+    y, state, tprev = S.rwkv_tmix(
+        lp["tmix"], L.rms_norm(x, lp["ln1"], cfg.norm_eps), cfg, pctx,
+        state=caches["state"], prev=caches["tprev"], single_step=True)
+    x = x + y
+    y, cprev = S.rwkv_cmix(lp["cmix"], L.rms_norm(x, lp["ln2"], cfg.norm_eps),
+                           cfg, pctx, prev=caches["cprev"])
+    return x + y, {"state": state, "tprev": tprev, "cprev": cprev}
+
+
+def hidden_states(params, cfg: ModelConfig, tokens, pctx=None):
+    x = L.embed(params["embed"], tokens, _dtype(cfg))
+    x = L.rms_norm(x, params["ln_in"], cfg.norm_eps)
+
+    def body(carry, lp):
+        return layer_fwd(lp, carry, cfg, pctx)[0], None
+
+    x = constrain_acts(x, pctx)
+    x, _ = jax.lax.scan(jax.checkpoint(body, policy=remat_policy(cfg)),
+                        x, params["layers"],
+                        unroll=True if cfg.scan_unroll else 1)
+    return L.rms_norm(x, params["ln_f"], cfg.norm_eps)
+
+
+def forward(params, cfg, batch, pctx=None):
+    return L.logits_head(hidden_states(params, cfg, batch["tokens"], pctx),
+                         params["lm_head"], pctx)
+
+
+def loss(params, cfg, batch, pctx=None):
+    return L.xent_loss(forward(params, cfg, batch, pctx), batch["labels"])
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_seq: int) -> dict:
+    h, hd = S.rwkv_dims(cfg)
+    l = cfg.n_layers
+    return {
+        "state": jnp.zeros((l, batch, h, hd, hd), jnp.float32),
+        "tprev": jnp.zeros((l, batch, 1, cfg.d_model), _dtype(cfg)),
+        "cprev": jnp.zeros((l, batch, 1, cfg.d_model), _dtype(cfg)),
+    }
+
+
+def decode_step(params, cfg: ModelConfig, batch, cache, pctx=None):
+    x = L.embed(params["embed"], batch["tokens"], _dtype(cfg))
+    x = L.rms_norm(x, params["ln_in"], cfg.norm_eps)
+
+    def body(x, lp_cache):
+        lp, st, tp, cp = lp_cache
+        x, new = layer_fwd(lp, x, cfg, pctx,
+                           caches={"state": st, "tprev": tp, "cprev": cp})
+        return x, (new["state"], new["tprev"], new["cprev"])
+
+    x, (st, tp, cp) = jax.lax.scan(
+        body, x, (params["layers"], cache["state"], cache["tprev"],
+                  cache["cprev"]),
+        unroll=True if cfg.scan_unroll else 1)
+    x = L.rms_norm(x, params["ln_f"], cfg.norm_eps)
+    return L.logits_head(x, params["lm_head"], pctx), \
+        {"state": st, "tprev": tp, "cprev": cp}

@@ -1,0 +1,272 @@
+"""State-space blocks: Mamba2 (chunked SSD) and RWKV6 (Finch, chunked WKV).
+
+Both use chunked-parallel forms: ``lax.scan`` over sequence chunks carrying a
+constant-size recurrent state, so training memory is O(chunk) and decode is a
+single-step state update — which is why these archs run the long_500k cell.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+from repro.parallel.tp import ParallelCtx, col_linear, row_linear
+
+
+
+# =========================================================================== #
+# Mamba2
+# =========================================================================== #
+def mamba2_dims(cfg: ModelConfig):
+    s = cfg.ssm
+    d_inner = s.expand * cfg.d_model
+    n_heads = d_inner // s.head_dim
+    return d_inner, n_heads, s.d_state, s.head_dim, s.conv_kernel
+
+
+def init_mamba2(key, cfg: ModelConfig) -> dict:
+    d = cfg.d_model
+    d_inner, h, n, hd, ck = mamba2_dims(cfg)
+    ks = jax.random.split(key, 4)
+    conv_dim = d_inner + 2 * n
+    return {
+        # order: [z, x, B, C, dt]
+        "w_in": L.dense_init(ks[0], (d, 2 * d_inner + 2 * n + h)),
+        "conv_w": L.dense_init(ks[1], (ck, conv_dim)) * 0.1,
+        "conv_b": jnp.zeros((conv_dim,)),
+        "A_log": jnp.zeros((h,)),
+        "D": jnp.ones((h,)),
+        "dt_bias": jnp.zeros((h,)),
+        "gate_norm": jnp.ones((d_inner,)),
+        "w_out": L.dense_init(ks[2], (d_inner, d)),
+    }
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, b: jax.Array,
+                 prev: Optional[jax.Array] = None):
+    """Depthwise causal conv. x: [B,S,C], w: [K,C]. Returns (y, last K-1)."""
+    k = w.shape[0]
+    pad = prev if prev is not None else jnp.zeros(
+        (x.shape[0], k - 1, x.shape[2]), x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)
+    y = sum(xp[:, i:i + x.shape[1], :] * w[i][None, None].astype(x.dtype)
+            for i in range(k))
+    y = jax.nn.silu(y + b.astype(x.dtype))
+    return y, xp[:, -(k - 1):, :]
+
+
+def _ssd_chunk(state, xs, cfg: ModelConfig):
+    """One SSD chunk. state: [B,H,hd,N]; xs = (x [B,C,H,hd], Bm/Cm [B,C,N],
+    logdec [B,C,H], dt [B,C,H]).  Returns (new_state, y [B,C,H,hd])."""
+    x, Bm, Cm, logdec, dt = xs
+    sdt = jnp.dtype(cfg.ssm.scores_dtype)
+    cum = jnp.cumsum(logdec, axis=1)                      # [B,C,H]
+    # intra-chunk attention-like term (causal, strictly lower + diag)
+    ratio = cum[:, :, None, :] - cum[:, None, :, :]       # [B,t,s,H]
+    tpos = jnp.arange(x.shape[1])
+    mask = (tpos[:, None] >= tpos[None, :])[None, :, :, None]
+    dec = jnp.where(mask, jnp.exp(ratio), 0.0).astype(sdt)
+    scores = (jnp.einsum("btn,bsn->bts", Cm, Bm).astype(sdt)[..., None]
+              * dec * dt[:, None, :, :].astype(sdt))      # [B,t,s,H]
+    y = jnp.einsum("btsh,bshd->bthd", scores.astype(x.dtype), x)
+    # inter-chunk contribution from the carried state
+    y = y + jnp.einsum("btn,bhdn,bth->bthd", Cm, state.astype(x.dtype),
+                       jnp.exp(cum).astype(x.dtype))
+    # state update
+    tail = jnp.exp(cum[:, -1:, :] - cum)                  # [B,C,H]
+    upd = jnp.einsum("bsh,bshd,bsn->bhdn", (tail * dt).astype(x.dtype), x, Bm)
+    new_state = state * jnp.exp(cum[:, -1])[:, :, None, None] + upd
+    return new_state, y
+
+
+def mamba2_block(p: dict, x: jax.Array, cfg: ModelConfig,
+                 pctx: Optional[ParallelCtx] = None,
+                 state=None, conv_prev=None, single_step: bool = False):
+    """x: [B,S,D] -> [B,S,D].  When single_step, S==1 and state/conv_prev are
+    the decode caches; returns (y, state, conv_prev)."""
+    b, s, d = x.shape
+    d_inner, h, n, hd, ck = mamba2_dims(cfg)
+    proj = col_linear(x, p["w_in"], pctx)
+    z, xin, Bm, Cm, dt = jnp.split(
+        proj, [d_inner, 2 * d_inner, 2 * d_inner + n, 2 * d_inner + 2 * n],
+        axis=-1)
+    conv_in = jnp.concatenate([xin, Bm, Cm], axis=-1)
+    conv_out, conv_prev = _causal_conv(conv_in, p["conv_w"], p["conv_b"],
+                                       conv_prev)
+    xin, Bm, Cm = jnp.split(conv_out, [d_inner, d_inner + n], axis=-1)
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32)
+                         + p["dt_bias"].astype(jnp.float32))      # [B,S,H]
+    a = -jnp.exp(p["A_log"].astype(jnp.float32))                  # [H]
+    logdec = dt * a[None, None, :]                                # [B,S,H]
+    xh = xin.reshape(b, s, h, hd)
+
+    if state is None:
+        state = jnp.zeros((b, h, hd, n), jnp.float32)
+
+    if single_step:
+        dec = jnp.exp(logdec[:, 0])                               # [B,H]
+        upd = jnp.einsum("bh,bhd,bn->bhdn", dt[:, 0], xh[:, 0], Bm[:, 0])
+        state = state * dec[:, :, None, None] + upd
+        y = jnp.einsum("bn,bhdn->bhd", Cm[:, 0], state)[:, None]  # [B,1,H,hd]
+        y = y.astype(x.dtype)
+    else:
+        CHUNK = min(cfg.ssm.chunk, s)
+        npad = (-s) % CHUNK
+        def pad(t):
+            return jnp.pad(t, [(0, 0), (0, npad)] + [(0, 0)] * (t.ndim - 2))
+        nchunks = (s + npad) // CHUNK
+        def reshape(t):
+            return pad(t).reshape(b, nchunks, CHUNK, *t.shape[2:]) \
+                         .swapaxes(0, 1)
+        xs = (reshape(xh), reshape(Bm), reshape(Cm),
+              reshape(logdec), reshape(dt))
+        state, y = jax.lax.scan(
+            lambda st, ch: _ssd_chunk(st, ch, cfg), state, xs,
+            unroll=True if cfg.scan_unroll else 1)
+        y = y.swapaxes(0, 1).reshape(b, nchunks * CHUNK, h, hd)[:, :s]
+        y = y.astype(x.dtype)
+
+    y = y + xh * p["D"].astype(x.dtype)[None, None, :, None]
+    y = y.reshape(b, s, d_inner) * jax.nn.silu(z)
+    y = L.rms_norm(y, p["gate_norm"], cfg.norm_eps)
+    out = row_linear(y, p["w_out"], pctx)
+    return out, state, conv_prev
+
+
+# =========================================================================== #
+# RWKV6 (Finch)
+# =========================================================================== #
+def rwkv_dims(cfg: ModelConfig):
+    hd = cfg.ssm.head_dim
+    return cfg.d_model // hd, hd
+
+
+def init_rwkv_tmix(key, cfg: ModelConfig) -> dict:
+    d = cfg.d_model
+    h, hd = rwkv_dims(cfg)
+    ks = jax.random.split(key, 8)
+    lora = 64
+    return {
+        "mu": 0.5 * jnp.ones((5, d)),            # token-shift mix for r,k,v,w,g
+        "wr": L.dense_init(ks[0], (d, d)),
+        "wk": L.dense_init(ks[1], (d, d)),
+        "wv": L.dense_init(ks[2], (d, d)),
+        "wg": L.dense_init(ks[3], (d, d)),
+        "w0": -6.0 * jnp.ones((d,)),             # base log-decay
+        "w_lora_a": L.dense_init(ks[4], (d, lora)),
+        "w_lora_b": L.dense_init(ks[5], (lora, d)) * 0.1,
+        "u": jnp.zeros((h, hd)),                 # per-head bonus
+        "ln_x": jnp.ones((d,)),
+        "wo": L.dense_init(ks[6], (d, d)),
+    }
+
+
+def init_rwkv_cmix(key, cfg: ModelConfig) -> dict:
+    ks = jax.random.split(key, 3)
+    return {
+        "mu": 0.5 * jnp.ones((2, cfg.d_model)),
+        "wk": L.dense_init(ks[0], (cfg.d_model, cfg.d_ff)),
+        "wv": L.dense_init(ks[1], (cfg.d_ff, cfg.d_model)),
+        "wr": L.dense_init(ks[2], (cfg.d_model, cfg.d_model)),
+    }
+
+
+def _shift(x: jax.Array, prev: Optional[jax.Array] = None):
+    """Token shift: x[t-1]; prev is the last token of the previous segment.
+    Returns (shifted, new_prev)."""
+    last = x[:, -1:, :]
+    if prev is None:
+        prev = jnp.zeros_like(x[:, :1, :])
+    return jnp.concatenate([prev, x[:, :-1, :]], axis=1), last
+
+
+def _wkv_chunk(state, xs, u):
+    """state: [B,H,hd,hd] (k x v). xs: r,k,v [B,C,H,hd], logw [B,C,H,hd];
+    u: [H,hd] bonus (closed over).  Returns (new_state, y)."""
+    r, k, v, logw = xs
+    cum = jnp.cumsum(logw, axis=1)                     # [B,C,H,hd]
+    cum_prev = cum - logw                              # cum through t-1
+    re = (r * jnp.exp(cum_prev)).astype(jnp.float32)
+    # exp(-cum) grows within the chunk; clamp keeps fp32 finite (exact while
+    # per-chunk cumulative decay <= 80 nats; see kernels/wkv6.py note).
+    kf = (k * jnp.exp(-jnp.maximum(cum, -80.0))).astype(jnp.float32)
+    scores = jnp.einsum("bthc,bshc->bhts", re, kf)     # strictly lower part
+    tpos = jnp.arange(r.shape[1])
+    mask = (tpos[:, None] > tpos[None, :])[None, None]
+    scores = jnp.where(mask, scores, 0.0)
+    diag = jnp.einsum("bthc,hc,bthc->bth", r, u, k)    # u-bonus (s == t)
+    y = jnp.einsum("bhts,bshd->bthd", scores, v) \
+        + diag[..., None] * v
+    y = y + jnp.einsum("bthc,bhcd->bthd", re, state)   # carried state
+    tail = jnp.exp(cum[:, -1:] - cum)                  # [B,C,H,hd]
+    new_state = state * jnp.exp(cum[:, -1])[..., None] \
+        + jnp.einsum("bshc,bshd->bhcd", (k * tail).astype(jnp.float32),
+                     v.astype(jnp.float32))
+    return new_state, y
+
+
+def rwkv_tmix(p: dict, x: jax.Array, cfg: ModelConfig,
+              pctx: Optional[ParallelCtx] = None,
+              state=None, prev=None, single_step: bool = False):
+    b, s, d = x.shape
+    h, hd = rwkv_dims(cfg)
+    xs, new_prev = _shift(x, prev)
+    mu = p["mu"].astype(x.dtype)
+    lerp = lambda i: x + (xs - x) * mu[i][None, None]
+    r = col_linear(lerp(0), p["wr"], pctx).reshape(b, s, h, hd)
+    k = col_linear(lerp(1), p["wk"], pctx).reshape(b, s, h, hd)
+    v = col_linear(lerp(2), p["wv"], pctx).reshape(b, s, h, hd)
+    g = jax.nn.silu(col_linear(lerp(4), p["wg"], pctx))
+    # data-dependent decay (lora)
+    wx = jnp.tanh(lerp(3) @ p["w_lora_a"].astype(x.dtype)) \
+        @ p["w_lora_b"].astype(x.dtype)
+    logw = -jnp.exp(jnp.clip(p["w0"].astype(jnp.float32)
+                             + wx.astype(jnp.float32), -10.0, 2.0))
+    logw = logw.reshape(b, s, h, hd)
+    u = p["u"].astype(jnp.float32)
+
+    if state is None:
+        state = jnp.zeros((b, h, hd, hd), jnp.float32)
+
+    rf = r.astype(jnp.float32)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    if single_step:
+        y = jnp.einsum("bhc,bhcd->bhd", rf[:, 0], state) \
+            + jnp.einsum("bhc,hc,bhc,bhd->bhd", rf[:, 0], u, kf[:, 0],
+                         vf[:, 0])
+        state = state * jnp.exp(logw[:, 0])[..., None] \
+            + jnp.einsum("bhc,bhd->bhcd", kf[:, 0], vf[:, 0])
+        y = y[:, None]
+    else:
+        CHUNK = min(cfg.ssm.chunk, s)
+        npad = (-s) % CHUNK
+        def reshape(t):
+            t = jnp.pad(t, [(0, 0), (0, npad)] + [(0, 0)] * (t.ndim - 2))
+            return t.reshape(b, -1, CHUNK, *t.shape[2:]).swapaxes(0, 1)
+        state, y = jax.lax.scan(
+            lambda st, ch: _wkv_chunk(st, ch, u), state,
+            (reshape(rf), reshape(kf), reshape(vf), reshape(logw)),
+            unroll=True if cfg.scan_unroll else 1)
+        y = y.swapaxes(0, 1).reshape(b, -1, h, hd)[:, :s]
+
+    y = y.astype(x.dtype).reshape(b, s, d)
+    y = L.rms_norm(y, p["ln_x"], cfg.norm_eps) * g
+    return row_linear(y, p["wo"], pctx), state, new_prev
+
+
+def rwkv_cmix(p: dict, x: jax.Array, cfg: ModelConfig,
+              pctx: Optional[ParallelCtx] = None, prev=None):
+    xs, new_prev = _shift(x, prev)
+    mu = p["mu"].astype(x.dtype)
+    xk = x + (xs - x) * mu[0][None, None]
+    xr = x + (xs - x) * mu[1][None, None]
+    k = jnp.square(jax.nn.relu(col_linear(xk, p["wk"], pctx)))
+    out = row_linear(k, p["wv"], pctx)          # INA site (channel-mix)
+    gate = jax.nn.sigmoid(col_linear(xr, p["wr"], pctx))
+    return out * gate, new_prev

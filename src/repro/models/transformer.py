@@ -1,0 +1,148 @@
+"""Dense decoder-only transformer (phi3 / llama3 / qwen2 / qwen3 families).
+
+Layers are stacked ([L, ...] leaves) and executed with ``lax.scan`` +
+``jax.checkpoint`` so the 512-device dry-run compiles one layer's HLO.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+from repro.parallel.tp import ParallelCtx, constrain_acts
+
+REMAT_POLICY = jax.checkpoint_policies.nothing_saveable
+
+
+def remat_policy(cfg: "ModelConfig"):
+    """Selectable activation-checkpoint policy (SSPerf hillclimb knob)."""
+    return {
+        "nothing": jax.checkpoint_policies.nothing_saveable,
+        "dots": jax.checkpoint_policies.checkpoint_dots,
+        "dots_nb": jax.checkpoint_policies.dots_with_no_batch_dims_saveable,
+    }[cfg.remat_policy]
+
+
+def _dtype(cfg: ModelConfig):
+    return jnp.dtype(cfg.dtype)
+
+
+# --------------------------------------------------------------------------- #
+# params
+# --------------------------------------------------------------------------- #
+def init_layer(key, cfg: ModelConfig) -> dict:
+    k1, k2 = jax.random.split(key)
+    hd = cfg.resolved_head_dim
+    return {
+        "ln1": jnp.ones((cfg.d_model,)),
+        "attn": L.init_attn(k1, cfg.d_model, cfg.n_heads, cfg.n_kv_heads, hd,
+                            cfg.qk_norm, cfg.qkv_bias),
+        "ln2": jnp.ones((cfg.d_model,)),
+        "mlp": L.init_mlp(k2, cfg.d_model, cfg.d_ff),
+    }
+
+
+def init(cfg: ModelConfig, key) -> dict:
+    keys = jax.random.split(key, cfg.n_layers + 2)
+    stacked = jax.tree.map(
+        lambda *xs: jnp.stack(xs),
+        *[init_layer(keys[i], cfg) for i in range(cfg.n_layers)])
+    params = {
+        "embed": L.dense_init(keys[-2], (cfg.vocab, cfg.d_model)),
+        "layers": stacked,
+        "ln_f": jnp.ones((cfg.d_model,)),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = L.dense_init(keys[-1], (cfg.d_model, cfg.vocab),
+                                         in_dim=cfg.d_model)
+    return params
+
+
+# --------------------------------------------------------------------------- #
+# forward (train / prefill)
+# --------------------------------------------------------------------------- #
+def layer_fwd(lp: dict, x: jax.Array, cfg: ModelConfig, cos, sin,
+              pctx: Optional[ParallelCtx]) -> jax.Array:
+    hd = cfg.resolved_head_dim
+    x = x + L.attn_block(lp["attn"], L.rms_norm(x, lp["ln1"], cfg.norm_eps),
+                         n_heads=cfg.n_heads, n_kv=cfg.n_kv_heads, head_dim=hd,
+                         cos=cos, sin=sin, causal=True, chunk=cfg.attn_chunk,
+                         eps=cfg.norm_eps, pctx=pctx, unroll=cfg.scan_unroll)
+    x = x + L.mlp_block(lp["mlp"], L.rms_norm(x, lp["ln2"], cfg.norm_eps), pctx)
+    return constrain_acts(x, pctx)
+
+
+def hidden_states(params: dict, cfg: ModelConfig, tokens: jax.Array,
+                  pctx: Optional[ParallelCtx] = None) -> jax.Array:
+    dt = _dtype(cfg)
+    x = L.embed(params["embed"], tokens, dt)
+    pos = jnp.arange(tokens.shape[1])
+    cos, sin = L.rope_cos_sin(pos, cfg.resolved_head_dim, cfg.rope_theta)
+
+    def body(carry, lp):
+        return layer_fwd(lp, carry, cfg, cos, sin, pctx), None
+
+    x = constrain_acts(x, pctx)
+    x, _ = jax.lax.scan(jax.checkpoint(body, policy=remat_policy(cfg)),
+                        x, params["layers"],
+                        unroll=True if cfg.scan_unroll else 1)
+    return L.rms_norm(x, params["ln_f"], cfg.norm_eps)
+
+
+def forward(params: dict, cfg: ModelConfig, batch: dict,
+            pctx: Optional[ParallelCtx] = None) -> jax.Array:
+    x = hidden_states(params, cfg, batch["tokens"], pctx)
+    head = params.get("lm_head")
+    if head is None:
+        head = params["embed"].T
+    return L.logits_head(x, head, pctx)
+
+
+def loss(params: dict, cfg: ModelConfig, batch: dict,
+         pctx: Optional[ParallelCtx] = None) -> jax.Array:
+    logits = forward(params, cfg, batch, pctx)
+    return L.xent_loss(logits, batch["labels"])
+
+
+# --------------------------------------------------------------------------- #
+# decode
+# --------------------------------------------------------------------------- #
+def init_cache(cfg: ModelConfig, batch: int, max_seq: int) -> dict:
+    hd = cfg.resolved_head_dim
+    shape = (cfg.n_layers, batch, max_seq, cfg.n_kv_heads, hd)
+    dt = _dtype(cfg)
+    return {"k": jnp.zeros(shape, dt), "v": jnp.zeros(shape, dt)}
+
+
+def decode_step(params: dict, cfg: ModelConfig, batch: dict, cache: dict,
+                pctx: Optional[ParallelCtx] = None):
+    """One-token decode. batch: {tokens: [B,1], pos: scalar}; returns
+    (logits [B,1,V], new cache)."""
+    dt = _dtype(cfg)
+    tokens, pos = batch["tokens"], batch["pos"]
+    hd = cfg.resolved_head_dim
+    x = L.embed(params["embed"], tokens, dt)
+    cos, sin = L.rope_cos_sin(pos[None], hd, cfg.rope_theta)
+
+    def body(x, lp_and_cache):
+        lp, ck, cv = lp_and_cache
+        h = L.rms_norm(x, lp["ln1"], cfg.norm_eps)
+        y, ck, cv = L.attn_block_decode(
+            lp["attn"], h, ck, cv, pos, n_heads=cfg.n_heads,
+            n_kv=cfg.n_kv_heads, head_dim=hd, cos=cos, sin=sin,
+            eps=cfg.norm_eps, pctx=pctx)
+        x = x + y
+        x = x + L.mlp_block(lp["mlp"], L.rms_norm(x, lp["ln2"], cfg.norm_eps),
+                            pctx)
+        return x, (ck, cv)
+
+    x, kv = jax.lax.scan(body, x, (params["layers"], cache["k"], cache["v"]),
+                         unroll=True if cfg.scan_unroll else 1)
+    x = L.rms_norm(x, params["ln_f"], cfg.norm_eps)
+    head = params.get("lm_head")
+    if head is None:
+        head = params["embed"].T
+    return L.logits_head(x, head, pctx), {"k": kv[0], "v": kv[1]}

@@ -1,0 +1,182 @@
+"""Llama-3.2-Vision backbone: dense decoder + gated cross-attention layers.
+
+The ViT frontend is a stub: ``input_specs()`` supplies precomputed patch
+embeddings [B, n_media, d_model].  Every ``cross_attn_every``-th layer is a
+gated cross-attention block (tanh-gated, as in Llama-3.2), executed as an
+outer scan over layer groups so the HLO stays one-group sized.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+from repro.models import transformer as T
+from repro.models.transformer import _dtype, remat_policy
+from repro.parallel.tp import ParallelCtx, col_linear, constrain_acts, row_linear
+
+
+def _groups(cfg: ModelConfig) -> tuple[int, int]:
+    per = cfg.cross_attn_every
+    assert cfg.n_layers % per == 0
+    return cfg.n_layers // per, per
+
+
+def init_xattn_layer(key, cfg: ModelConfig) -> dict:
+    k1, k2 = jax.random.split(key)
+    return {
+        "lnx": jnp.ones((cfg.d_model,)),
+        "xattn": L.init_attn(k1, cfg.d_model, cfg.n_heads, cfg.n_kv_heads,
+                             cfg.resolved_head_dim, qk_norm=True),
+        "gate_attn": jnp.zeros(()),
+        "ln2": jnp.ones((cfg.d_model,)),
+        "mlp": L.init_mlp(k2, cfg.d_model, cfg.d_ff),
+        "gate_mlp": jnp.zeros(()),
+    }
+
+
+def init(cfg: ModelConfig, key) -> dict:
+    g, per = _groups(cfg)
+    keys = jax.random.split(key, cfg.n_layers + g + 2)
+    self_layers = [T.init_layer(keys[i], cfg) for i in range(cfg.n_layers - g)]
+    stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *self_layers)
+    stacked = jax.tree.map(
+        lambda a: a.reshape(g, per - 1, *a.shape[1:]), stacked)
+    xlayers = [init_xattn_layer(keys[cfg.n_layers - g + i], cfg)
+               for i in range(g)]
+    return {
+        "embed": L.dense_init(keys[-2], (cfg.vocab, cfg.d_model)),
+        "groups": stacked,
+        "xlayers": jax.tree.map(lambda *xs: jnp.stack(xs), *xlayers),
+        "ln_f": jnp.ones((cfg.d_model,)),
+        "lm_head": L.dense_init(keys[-1], (cfg.d_model, cfg.vocab),
+                                in_dim=cfg.d_model),
+    }
+
+
+def xattn_fwd(xp, x, media, cfg, pctx, media_kv=None):
+    """Gated cross-attention + MLP.  media: [B, M, D] patch embeddings."""
+    b, s, _ = x.shape
+    hd = cfg.resolved_head_dim
+    h = L.rms_norm(x, xp["lnx"], cfg.norm_eps)
+    q = col_linear(h, xp["xattn"]["wq"], pctx).reshape(b, s, cfg.n_heads, hd)
+    q = L.rms_norm(q, xp["xattn"]["q_norm"], cfg.norm_eps)
+    if media_kv is None:
+        k = col_linear(media, xp["xattn"]["wk"], pctx).reshape(
+            b, media.shape[1], cfg.n_kv_heads, hd)
+        k = L.rms_norm(k, xp["xattn"]["k_norm"], cfg.norm_eps)
+        v = col_linear(media, xp["xattn"]["wv"], pctx).reshape(
+            b, media.shape[1], cfg.n_kv_heads, hd)
+    else:
+        k, v = media_kv
+    o = L.attn_full(q, k, v, causal=False)
+    o = row_linear(o.reshape(b, s, cfg.n_heads * hd), xp["xattn"]["wo"], pctx)
+    x = x + jnp.tanh(xp["gate_attn"]).astype(x.dtype) * o
+    y = L.mlp_block(xp["mlp"], L.rms_norm(x, xp["ln2"], cfg.norm_eps), pctx)
+    x = x + jnp.tanh(xp["gate_mlp"]).astype(x.dtype) * y
+    return x
+
+
+def hidden_states(params, cfg: ModelConfig, tokens, media, pctx=None):
+    x = L.embed(params["embed"], tokens, _dtype(cfg))
+    media = media.astype(x.dtype)
+    cos, sin = L.rope_cos_sin(jnp.arange(tokens.shape[1]),
+                              cfg.resolved_head_dim, cfg.rope_theta)
+
+    def gbody(carry, g):
+        gp, xp = g
+        def sbody(c, lp):
+            return T.layer_fwd(lp, c, cfg, cos, sin, pctx), None
+        carry, _ = jax.lax.scan(sbody, carry, gp,
+                                unroll=True if cfg.scan_unroll else 1)
+        carry = constrain_acts(xattn_fwd(xp, carry, media, cfg, pctx), pctx)
+        return carry, None
+
+    x = constrain_acts(x, pctx)
+    x, _ = jax.lax.scan(jax.checkpoint(gbody, policy=remat_policy(cfg)),
+                        x, (params["groups"], params["xlayers"]),
+                        unroll=True if cfg.scan_unroll else 1)
+    return L.rms_norm(x, params["ln_f"], cfg.norm_eps)
+
+
+def forward(params, cfg, batch, pctx=None):
+    x = hidden_states(params, cfg, batch["tokens"], batch["media"], pctx)
+    return L.logits_head(x, params["lm_head"], pctx)
+
+
+def loss(params, cfg, batch, pctx=None):
+    return L.xent_loss(forward(params, cfg, batch, pctx), batch["labels"])
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_seq: int) -> dict:
+    g, per = _groups(cfg)
+    hd = cfg.resolved_head_dim
+    dt = _dtype(cfg)
+    m = cfg.num_media_tokens
+    return {
+        "k": jnp.zeros((g, per - 1, batch, max_seq, cfg.n_kv_heads, hd), dt),
+        "v": jnp.zeros((g, per - 1, batch, max_seq, cfg.n_kv_heads, hd), dt),
+        # cross-attention K/V over the media tokens (computed once)
+        "mk": jnp.zeros((g, batch, m, cfg.n_kv_heads, hd), dt),
+        "mv": jnp.zeros((g, batch, m, cfg.n_kv_heads, hd), dt),
+    }
+
+
+def prefill_media_kv(params, cfg: ModelConfig, media, cache, pctx=None):
+    """Populate the cross-attn K/V cache from media embeddings."""
+    def body(_, xp):
+        k = col_linear(media, xp["xattn"]["wk"], pctx).reshape(
+            media.shape[0], media.shape[1], cfg.n_kv_heads,
+            cfg.resolved_head_dim)
+        k = L.rms_norm(k, xp["xattn"]["k_norm"], cfg.norm_eps)
+        v = col_linear(media, xp["xattn"]["wv"], pctx).reshape(
+            media.shape[0], media.shape[1], cfg.n_kv_heads,
+            cfg.resolved_head_dim)
+        return None, (k, v)
+
+    _, (mk, mv) = jax.lax.scan(body, None, params["xlayers"])
+    cache = dict(cache)
+    cache["mk"], cache["mv"] = mk.astype(cache["mk"].dtype), \
+        mv.astype(cache["mv"].dtype)
+    return cache
+
+
+def decode_step(params, cfg: ModelConfig, batch, cache, pctx=None):
+    tokens, pos = batch["tokens"], batch["pos"]
+    hd = cfg.resolved_head_dim
+    x = L.embed(params["embed"], tokens, _dtype(cfg))
+    cos, sin = L.rope_cos_sin(pos[None], hd, cfg.rope_theta)
+
+    def gbody(x, g):
+        gp, xp, ck, cv, mk, mv = g
+
+        def sbody(x, lp_kv):
+            lp, k, v = lp_kv
+            h = L.rms_norm(x, lp["ln1"], cfg.norm_eps)
+            y, k, v = L.attn_block_decode(lp["attn"], h, k, v, pos,
+                                          n_heads=cfg.n_heads,
+                                          n_kv=cfg.n_kv_heads, head_dim=hd,
+                                          cos=cos, sin=sin, eps=cfg.norm_eps,
+                                          pctx=pctx)
+            x = x + y
+            x = x + L.mlp_block(lp["mlp"],
+                                L.rms_norm(x, lp["ln2"], cfg.norm_eps), pctx)
+            return x, (k, v)
+
+        x, (ck, cv) = jax.lax.scan(sbody, x, (gp, ck, cv),
+                                   unroll=True if cfg.scan_unroll else 1)
+        x = xattn_fwd(xp, x, None, cfg, pctx,
+                      media_kv=(mk.astype(x.dtype), mv.astype(x.dtype)))
+        return x, (ck, cv)
+
+    x, (ck, cv) = jax.lax.scan(
+        gbody, x, (params["groups"], params["xlayers"], cache["k"],
+                   cache["v"], cache["mk"], cache["mv"]),
+        unroll=True if cfg.scan_unroll else 1)
+    x = L.rms_norm(x, params["ln_f"], cfg.norm_eps)
+    new_cache = dict(cache)
+    new_cache["k"], new_cache["v"] = ck, cv
+    return L.logits_head(x, params["lm_head"], pctx), new_cache

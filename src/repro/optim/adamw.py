@@ -1,0 +1,73 @@
+"""AdamW with global-norm clipping and a cosine schedule (pure JAX).
+
+Optimizer state mirrors the parameter pytree (m, v per leaf) so the same
+FSDP PartitionSpecs shard it without extra rules.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamWState(NamedTuple):
+    step: jax.Array          # int32 scalar
+    m: dict
+    v: dict
+
+
+def adamw_init(params) -> AdamWState:
+    zeros = jax.tree.map(lambda p: jnp.zeros_like(p, dtype=jnp.float32),
+                         params)
+    return AdamWState(step=jnp.zeros((), jnp.int32), m=zeros,
+                      v=jax.tree.map(jnp.copy, zeros))
+
+
+def cosine_schedule(base_lr: float, warmup: int, total: int):
+    def lr(step):
+        step = step.astype(jnp.float32)
+        warm = base_lr * jnp.minimum(1.0, step / jnp.maximum(warmup, 1))
+        frac = jnp.clip((step - warmup) / jnp.maximum(total - warmup, 1),
+                        0.0, 1.0)
+        cos = 0.5 * (1.0 + jnp.cos(jnp.pi * frac))
+        return jnp.where(step < warmup, warm, base_lr * (0.1 + 0.9 * cos))
+    return lr
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    gnorm = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                         for g in jax.tree.leaves(grads)))
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gnorm, 1e-9))
+    return jax.tree.map(lambda g: g * scale.astype(g.dtype), grads), gnorm
+
+
+def adamw_update(params, grads, state: AdamWState, lr, *,
+                 b1: float = 0.9, b2: float = 0.95, eps: float = 1e-8,
+                 weight_decay: float = 0.1, max_norm: float = 1.0):
+    """One AdamW step.  ``lr`` is a schedule fn (step -> lr) or a float."""
+    grads, gnorm = clip_by_global_norm(grads, max_norm)
+    step = state.step + 1
+    lr_t = lr(step) if callable(lr) else jnp.float32(lr)
+    b1c = 1.0 - b1 ** step.astype(jnp.float32)
+    b2c = 1.0 - b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, m, v):
+        g32 = g.astype(jnp.float32)
+        m = b1 * m + (1 - b1) * g32
+        v = b2 * v + (1 - b2) * jnp.square(g32)
+        mhat = m / b1c
+        vhat = v / b2c
+        delta = mhat / (jnp.sqrt(vhat) + eps) + weight_decay * \
+            p.astype(jnp.float32) * (p.ndim >= 2)
+        return (p.astype(jnp.float32) - lr_t * delta).astype(p.dtype), m, v
+
+    out = jax.tree.map(upd, params, grads, state.m, state.v)
+    new_params = jax.tree.map(lambda t: t[0], out,
+                              is_leaf=lambda t: isinstance(t, tuple))
+    new_m = jax.tree.map(lambda t: t[1], out,
+                         is_leaf=lambda t: isinstance(t, tuple))
+    new_v = jax.tree.map(lambda t: t[2], out,
+                         is_leaf=lambda t: isinstance(t, tuple))
+    return new_params, AdamWState(step=step, m=new_m, v=new_v), \
+        {"grad_norm": gnorm, "lr": lr_t}

@@ -1,0 +1,3 @@
+from .tp import ParallelCtx, col_linear, combine_experts, row_linear
+
+__all__ = ["ParallelCtx", "col_linear", "combine_experts", "row_linear"]

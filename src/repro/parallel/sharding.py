@@ -1,0 +1,83 @@
+"""Sharding utilities: fit PartitionSpecs to actual shapes and meshes.
+
+Name-rule specs (models/api.py) are *intents*; real shapes sometimes cannot
+honor them (GQA KV heads narrower than the TP span, batch=1 long-context
+decode, odd vocab sizes).  ``fit_specs`` repairs a spec pytree against the
+shape pytree: axes that do not divide their dim are moved to the largest
+free dim they do divide (e.g. batch=1 decode -> sequence/context sharding),
+or dropped.
+"""
+from __future__ import annotations
+
+from typing import Iterable
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+def _axes_of(entry) -> tuple:
+    if entry is None:
+        return ()
+    if isinstance(entry, (tuple, list)):
+        return tuple(entry)
+    return (entry,)
+
+
+def fit_spec(spec: P, shape: tuple, mesh: Mesh) -> P:
+    """Repair one PartitionSpec against a concrete shape."""
+    ndim = len(shape)
+    entries = list(spec) + [None] * (ndim - len(spec))
+    entries = entries[:ndim]
+    sizes = dict(mesh.shape)
+
+    placed: list[list] = [[] for _ in range(ndim)]
+    used: set = set()
+    homeless: list[str] = []
+    for d, entry in enumerate(entries):
+        for ax in _axes_of(entry):
+            if ax not in sizes or ax in used:
+                continue                       # absent from mesh / duplicate
+            span = int(np.prod([sizes[a] for a in placed[d]] + [sizes[ax]]))
+            if shape[d] % span == 0 and shape[d] >= span:
+                placed[d].append(ax)
+                used.add(ax)
+            else:
+                homeless.append(ax)
+
+    # Try to relocate homeless axes to the largest free divisible dim.
+    for ax in homeless:
+        if ax in used:
+            continue
+        cands = sorted(range(ndim), key=lambda d: -shape[d])
+        for d in cands:
+            span = int(np.prod([sizes[a] for a in placed[d]] + [sizes[ax]]))
+            if shape[d] % span == 0 and shape[d] >= span and shape[d] > 1:
+                placed[d].append(ax)
+                used.add(ax)
+                break
+
+    out = []
+    for d in range(ndim):
+        if not placed[d]:
+            out.append(None)
+        elif len(placed[d]) == 1:
+            out.append(placed[d][0])
+        else:
+            out.append(tuple(placed[d]))
+    while out and out[-1] is None:
+        out.pop()
+    return P(*out)
+
+
+def fit_specs(specs, shapes, mesh: Mesh):
+    """Tree-version: ``shapes`` is a pytree of ShapeDtypeStruct/arrays."""
+    return jax.tree.map(
+        lambda sp, sh: fit_spec(sp, sh.shape, mesh), specs, shapes,
+        is_leaf=lambda x: isinstance(x, P))
+
+
+def shardings_for(specs, shapes, mesh: Mesh):
+    fitted = fit_specs(specs, shapes, mesh)
+    return jax.tree.map(lambda sp: NamedSharding(mesh, sp), fitted,
+                        is_leaf=lambda x: isinstance(x, P))

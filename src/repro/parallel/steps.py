@@ -1,0 +1,160 @@
+"""train_step / serve_step builders with full sharding plumbing.
+
+``build_train_step``: loss -> grads -> AdamW, params+optimizer FSDP/TP
+sharded, batch sharded over (pod, data).  ``build_serve_step``: one-token
+decode against a sharded KV cache.  Both return (jitted_fn, shardings) so
+the dry-run can ``.lower().compile()`` them with ShapeDtypeStructs only.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models.api import Model, cache_specs, param_specs
+from repro.optim.adamw import AdamWState, adamw_init, adamw_update, cosine_schedule
+from repro.parallel.sharding import fit_specs, shardings_for
+from repro.parallel.tp import ParallelCtx
+
+
+def _data_axes(mesh: Mesh):
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+@dataclasses.dataclass
+class TrainStep:
+    fn: object                    # jitted (params, opt, batch) -> ...
+    param_sharding: dict
+    opt_sharding: object
+    batch_sharding: dict
+    param_shapes: dict
+
+
+def build_train_step(model: Model, mesh: Mesh, shape: ShapeConfig,
+                     pctx: Optional[ParallelCtx] = None,
+                     base_lr: float = 3e-4, warmup: int = 200,
+                     total_steps: int = 10_000,
+                     donate: bool = True) -> TrainStep:
+    cfg = model.cfg
+    pctx = pctx if pctx is not None else ParallelCtx(mesh=mesh)
+    lr = cosine_schedule(base_lr, warmup, total_steps)
+
+    # Shapes without allocation; sharding intents fitted to real dims.
+    pshapes = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    pspecs = fit_specs(param_specs(pshapes, mesh), pshapes, mesh)
+    psh = jax.tree.map(lambda s: NamedSharding(mesh, s), pspecs,
+                       is_leaf=lambda x: isinstance(x, P))
+    oshapes = jax.eval_shape(adamw_init, pshapes)
+    osh = AdamWState(
+        step=NamedSharding(mesh, P()),
+        m=jax.tree.map(lambda s: NamedSharding(mesh, s), pspecs,
+                       is_leaf=lambda x: isinstance(x, P)),
+        v=jax.tree.map(lambda s: NamedSharding(mesh, s), pspecs,
+                       is_leaf=lambda x: isinstance(x, P)))
+
+    baxes = _data_axes(mesh)
+    bspecs = model.batch_specs(shape, data_axes=baxes)
+    _ishapes = model.input_specs(shape)
+    bspecs = {k: fit_specs(v, _ishapes[k], mesh) for k, v in bspecs.items()}
+    bsh = {k: NamedSharding(mesh, v) for k, v in bspecs.items()}
+
+    def step(params, opt: AdamWState, batch):
+        loss, grads = jax.value_and_grad(
+            lambda p: model.loss(p, batch, pctx))(params)
+        new_params, new_opt, stats = adamw_update(params, grads, opt, lr)
+        stats["loss"] = loss
+        return new_params, new_opt, stats
+
+    jitted = jax.jit(
+        step,
+        in_shardings=(psh, osh, bsh),
+        out_shardings=(psh, osh, None),
+        donate_argnums=(0, 1) if donate else ())
+    return TrainStep(fn=jitted, param_sharding=psh, opt_sharding=osh,
+                     batch_sharding=bsh, param_shapes=pshapes)
+
+
+@dataclasses.dataclass
+class ServeStep:
+    fn: object                    # jitted (params, batch, cache) -> ...
+    param_sharding: dict
+    cache_sharding: dict
+    batch_sharding: dict
+    param_shapes: dict
+    cache_shapes: dict
+
+
+def build_serve_step(model: Model, mesh: Mesh, shape: ShapeConfig,
+                     pctx: Optional[ParallelCtx] = None,
+                     donate_cache: bool = True) -> ServeStep:
+    cfg = model.cfg
+    pctx = pctx if pctx is not None else ParallelCtx(mesh=mesh)
+    baxes = _data_axes(mesh)
+
+    pshapes = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    pspecs = fit_specs(param_specs(pshapes, mesh), pshapes, mesh)
+    if pctx.serve_replicated_params:
+        # Serving layout: drop FSDP axes so decode never gathers params
+        # (params replicated over data/pod, sharded over model only).
+        def _strip(spec):
+            return P(*[tuple(a for a in (e if isinstance(e, tuple) else (e,))
+                             if a == "model") or None
+                       if e is not None else None for e in spec])
+        pspecs = jax.tree.map(_strip, pspecs,
+                              is_leaf=lambda x: isinstance(x, P))
+    psh = jax.tree.map(lambda s: NamedSharding(mesh, s), pspecs,
+                       is_leaf=lambda x: isinstance(x, P))
+
+    cshapes = jax.eval_shape(
+        partial(model.init_cache, shape.global_batch, shape.seq_len))
+    cspecs = fit_specs(cache_specs(cfg, baxes), cshapes, mesh)
+    csh = jax.tree.map(lambda s: NamedSharding(mesh, s), cspecs,
+                       is_leaf=lambda x: isinstance(x, P))
+
+    bspecs = model.batch_specs(shape, data_axes=baxes)
+    _ishapes = model.input_specs(shape)
+    bspecs = {k: fit_specs(v, _ishapes[k], mesh) for k, v in bspecs.items()}
+    bsh = {k: NamedSharding(mesh, v) for k, v in bspecs.items()}
+
+    def step(params, batch, cache):
+        logits, new_cache = model.decode_step(params, batch, cache, pctx)
+        # greedy next-token (serving semantics)
+        next_tok = jnp.argmax(logits[:, -1, :], axis=-1)
+        return next_tok, new_cache
+
+    from repro.parallel.sharding import fit_spec
+    tok_spec = fit_spec(P(baxes), (shape.global_batch,), mesh)
+    jitted = jax.jit(
+        step,
+        in_shardings=(psh, bsh, csh),
+        out_shardings=(NamedSharding(mesh, tok_spec), csh),
+        donate_argnums=(2,) if donate_cache else ())
+    return ServeStep(fn=jitted, param_sharding=psh, cache_sharding=csh,
+                     batch_sharding=bsh, param_shapes=pshapes,
+                     cache_shapes=cshapes)
+
+
+def build_prefill(model: Model, mesh: Mesh, shape: ShapeConfig,
+                  pctx: Optional[ParallelCtx] = None):
+    """Forward-only full-sequence pass (the prefill_32k cells)."""
+    pctx = pctx if pctx is not None else ParallelCtx(mesh=mesh)
+    pshapes = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    pspecs = fit_specs(param_specs(pshapes, mesh), pshapes, mesh)
+    psh = jax.tree.map(lambda s: NamedSharding(mesh, s), pspecs,
+                       is_leaf=lambda x: isinstance(x, P))
+    baxes = _data_axes(mesh)
+    bspecs = model.batch_specs(shape, data_axes=baxes)
+    _ishapes = model.input_specs(shape)
+    bspecs = {k: fit_specs(v, _ishapes[k], mesh) for k, v in bspecs.items()}
+    bsh = {k: NamedSharding(mesh, v) for k, v in bspecs.items()}
+
+    def fwd(params, batch):
+        return model.forward(params, batch, pctx)
+
+    jitted = jax.jit(fwd, in_shardings=(psh, bsh))
+    return jitted, psh, bsh, pshapes

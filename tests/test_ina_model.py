@@ -1,0 +1,92 @@
+"""Exact reproduction of the paper's Tables I & II (INA analytical model)."""
+import pytest
+
+from repro.core.ina_model import (ConvLayer, ina_rounds, ina_table, needs_ina,
+                                  p_num, total_ina_rounds)
+from repro.core.workloads import ALEXNET, RESNET50, VGG16
+
+# (layer, P#, INA# @ N=8, INA# @ N=16) — paper Table I.
+TABLE_I = {
+    "CONV1": (1, None, None),
+    "CONV2": (2, 4374, 1094),
+    "CONV3": (2, 2028, 507),
+    "CONV4": (4, 2704, 676),
+    "CONV5": (3, 2704, 541),
+}
+
+# Paper Table II.  CONV3 is the paper's anomalous row (P#=1 yet INA# listed);
+# per Eq. (1) it is NA — we check the paper's value under force=True below.
+TABLE_II = {
+    "CONV1":  (1, None, None),
+    "CONV2":  (1, None, None),
+    "CONV3":  (1, None, None),          # paper lists 25088/6272, see DESIGN.md S7
+    "CONV4":  (2, 50176, 12544),
+    "CONV5":  (2, 25088, 6272),
+    "CONV6":  (3, 50176, 10036),
+    "CONV7":  (3, 50176, 10036),
+    "CONV8":  (3, 25088, 5018),
+    "CONV9":  (5, 50176, 8363),
+    "CONV10": (5, 50176, 8363),
+    "CONV11": (5, 12544, 2091),
+    "CONV12": (5, 12544, 2091),
+    "CONV13": (5, 12544, 2091),
+}
+
+
+@pytest.mark.parametrize("layer", ALEXNET, ids=lambda l: l.name)
+def test_table_i(layer):
+    p_ref, ina8, ina16 = TABLE_I[layer.name]
+    assert p_num(layer) == p_ref
+    assert ina_rounds(layer, n=8) == ina8
+    assert ina_rounds(layer, n=16) == ina16
+
+
+@pytest.mark.parametrize("layer", VGG16, ids=lambda l: l.name)
+def test_table_ii(layer):
+    p_ref, ina8, ina16 = TABLE_II[layer.name]
+    assert p_num(layer) == p_ref
+    assert ina_rounds(layer, n=8) == ina8
+    assert ina_rounds(layer, n=16) == ina16
+
+
+def test_vgg_conv3_paper_anomaly():
+    """The paper's CONV3 row reproduces under force=True (Eq. 3 applied at P#=1)."""
+    conv3 = VGG16[2]
+    assert not needs_ina(conv3)
+    assert ina_rounds(conv3, n=8, force=True) == 25088
+    assert ina_rounds(conv3, n=16, force=True) == 6272
+
+
+def test_eq1_threshold_is_exact():
+    """Eq. (1) is a strict inequality at the memory boundary."""
+    at_boundary = ConvLayer("b", R=1, C=1024, F=8, O=4)      # 1024*32 = 32768 = M
+    over = ConvLayer("o", R=1, C=1025, F=8, O=4)
+    assert not needs_ina(at_boundary)
+    assert needs_ina(over)
+    assert p_num(at_boundary) == 1 and p_num(over) == 2
+
+
+def test_eq4_multiple_pes_per_router():
+    """Eq. (4): E PEs/router divides the filter term."""
+    conv2 = ALEXNET[1]
+    assert ina_rounds(conv2, n=8, e_pes_per_router=2) == 2187
+    assert ina_rounds(conv2, n=8, e_pes_per_router=4) == 1094   # ceil(4373.99../4)... ceil(6*729/4)
+
+    # Consistency: E=1 matches Eq. (3).
+    for layer in ALEXNET + VGG16:
+        assert ina_rounds(layer, 8, 1) == ina_rounds(layer, 8)
+
+
+def test_resnet50_mostly_fits():
+    """Paper SIV.B: 'most of ResNet-50 does not need to split the weights'."""
+    split = [l for l in RESNET50 if needs_ina(l)]
+    assert 0 < len(split) < len(RESNET50) / 2
+    # Aggregate rounds ordering the paper relies on: VGG-16 >> AlexNet, ResNet low.
+    assert total_ina_rounds(VGG16, 8) > total_ina_rounds(RESNET50, 8)
+    assert total_ina_rounds(VGG16, 8) > total_ina_rounds(ALEXNET, 8)
+
+
+def test_table_shape():
+    rows = ina_table(ALEXNET, n=8)
+    assert [r["layer"] for r in rows] == [l.name for l in ALEXNET]
+    assert rows[1]["INA#"] == 4374 and rows[0]["INA#"] is None

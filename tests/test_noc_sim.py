@@ -1,0 +1,140 @@
+"""NoC simulator invariants + paper Figs 7-12 reproduction bands."""
+import pytest
+
+from repro.core.ina_model import ConvLayer
+from repro.core.noc import NocConfig, NocSim, simulate_layer, simulate_network
+from repro.core.noc.power import ws_ina_improvement, ws_vs_os_improvement
+from repro.core.noc.traffic import _plan, _sim_rounds_window
+from repro.core.workloads import ALEXNET, VGG16
+
+CFG = NocConfig()
+
+
+# --------------------------------------------------------------------------- #
+# Simulator micro-invariants
+# --------------------------------------------------------------------------- #
+def test_uncontended_packet_latency():
+    """head latency = NI + hops*(router+link) + router + NI; tail += flits-1."""
+    sim = NocSim(CFG)
+    done = {}
+    sim.enqueue(0, (0, 0), (0, 3), 4, on_done=lambda t: done.setdefault("t", t))
+    sim.run()
+    hops = 3
+    expect_head = CFG.ni_cycles + hops * (CFG.router_cycles + CFG.link_cycles) \
+        + CFG.router_cycles + CFG.ni_cycles
+    assert done["t"] == expect_head + 4 - 1
+
+
+def test_xy_route_no_link_sharing_between_columns():
+    """Packets in different columns never contend."""
+    sim = NocSim(CFG)
+    times = []
+    for x in range(4):
+        sim.enqueue(0, (x, 0), (x, 7), 3, on_done=times.append)
+    sim.run()
+    assert len(set(times)) == 1          # perfectly parallel
+
+
+def test_same_link_serializes():
+    sim = NocSim(CFG)
+    times = []
+    sim.enqueue(0, (0, 0), (0, 1), 4, on_done=times.append)
+    sim.enqueue(0, (0, 0), (0, 1), 4, on_done=times.append)
+    sim.run()
+    assert max(times) >= min(times) + 4  # injection port + link occupancy
+
+
+def test_wormhole_serialization_in_tail():
+    sim = NocSim(CFG)
+    done = {}
+    sim.enqueue(0, (0, 0), (1, 0), 1, on_done=lambda t: done.setdefault("f1", t))
+    sim2 = NocSim(CFG)
+    sim2.enqueue(0, (0, 0), (1, 0), 9, on_done=lambda t: done.setdefault("f9", t))
+    sim.run(), sim2.run()
+    assert done["f9"] == done["f1"] + 8
+
+
+def test_chain_eject_inject_is_serial():
+    """Relay over P nodes costs ~(P-1) x full packet latencies."""
+    sim = NocSim(CFG)
+    done = {}
+    sim.chain_eject_inject(0, [(0, y) for y in range(5)], 2,
+                           on_done=lambda t: done.setdefault("t", t))
+    sim.run()
+    one_hop = 2 * CFG.ni_cycles + CFG.router_cycles + CFG.link_cycles \
+        + CFG.router_cycles + 1 + CFG.pe_add_cycles   # + tail flit
+    assert done["t"] >= 4 * one_hop
+
+
+def test_energy_linear_in_rounds():
+    plan = _plan(ALEXNET[1], CFG, 1, "ws_ina")
+    _, led8 = _sim_rounds_window(plan, CFG, "ws_ina", 8)
+    _, led16 = _sim_rounds_window(plan, CFG, "ws_ina", 16)
+    assert led16.network_energy_pj(CFG) == pytest.approx(
+        2 * led8.network_energy_pj(CFG))
+
+
+# --------------------------------------------------------------------------- #
+# INA semantics
+# --------------------------------------------------------------------------- #
+@pytest.mark.parametrize("layer", [l for l in ALEXNET if l.name != "CONV1"],
+                         ids=lambda l: l.name)
+def test_ina_always_helps_when_split(layer):
+    base = simulate_layer(layer, "ws_noina", CFG, 1, sim_rounds=16)
+    ina = simulate_layer(layer, "ws_ina", CFG, 1, sim_rounds=16)
+    assert ina.latency_cycles < base.latency_cycles
+    assert ina.noc_energy_pj < base.noc_energy_pj
+
+
+def test_no_split_no_difference():
+    """P#=1 layers (no INA per Eq. 1) behave identically in both modes."""
+    conv1 = ALEXNET[0]
+    base = simulate_layer(conv1, "ws_noina", CFG, 1, sim_rounds=16)
+    ina = simulate_layer(conv1, "ws_ina", CFG, 1, sim_rounds=16)
+    assert base.latency_cycles == ina.latency_cycles
+    assert base.noc_energy_pj == ina.noc_energy_pj
+
+
+def test_gather_flit_sizes_match_table_iii():
+    """Table III: 3/5/9(/17)-flit gather packets for 1/2/4(/8) PEs/router at
+    the full-column (P#=1) collection the paper sizes against."""
+    assert [CFG.gather_flits(8 * e) for e in (1, 2, 4, 8)] == [3, 5, 9, 17]
+    assert [CFG.unicast_flits(e) for e in (1, 2, 4)] == [2, 2, 2]
+    assert CFG.unicast_flits(8) == 3
+
+
+# --------------------------------------------------------------------------- #
+# Paper headline bands (Figs 7-9 / 10-12); see EXPERIMENTS.md for calibration.
+# --------------------------------------------------------------------------- #
+def test_fig7_alexnet_bands():
+    imp = ws_ina_improvement("alexnet", ALEXNET, 1, CFG, sim_rounds=16)
+    assert 1.1 <= imp.latency_x <= 1.6          # paper: up to 1.17x
+    assert 1.8 <= imp.energy_x <= 2.4           # paper: up to 2.1x
+
+
+def test_fig9_vgg_bands():
+    imp = ws_ina_improvement("vgg16", VGG16, 1, CFG, sim_rounds=16)
+    assert 1.3 <= imp.latency_x <= 2.0
+    assert 1.7 <= imp.energy_x <= 2.4           # paper: 2.16x
+
+
+def test_power_improvement_decreases_with_pes():
+    """Paper SIV.B: smaller number of PEs shows the highest power improvement."""
+    imps = [ws_ina_improvement("alexnet", ALEXNET, e, CFG, sim_rounds=16)
+            for e in (1, 2, 4, 8)]
+    assert imps[0].energy_x > imps[1].energy_x > imps[2].energy_x
+
+
+def test_ws_vs_os_degrades_with_pes():
+    """Paper SIV.B: WS latency advantage over OS degrades as PEs/router grow."""
+    imps = [ws_vs_os_improvement("alexnet", ALEXNET, e, CFG, sim_rounds=16)
+            for e in (1, 2, 4, 8)]
+    assert imps[0].latency_x > imps[-1].latency_x
+    assert imps[0].latency_x > 1.0              # paper: up to 1.19x at E=1
+
+
+def test_network_totals_aggregate():
+    net = simulate_network(ALEXNET, "ws_ina", CFG, 1, sim_rounds=8)
+    assert net["latency_cycles"] == pytest.approx(
+        sum(l.latency_cycles for l in net["layers"]))
+    assert net["total_energy_pj"] > 0
