@@ -13,8 +13,9 @@ if not os.environ.get("XLA_FLAGS"):
 import jax
 import jax.numpy as jnp
 import numpy as np
-from jax import shard_map
 from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.compat import shard_map
 
 from repro.core.ina_model import ina_table
 from repro.core.noc.power import ws_ina_improvement

@@ -1,0 +1,78 @@
+"""Version-compat shims for the jax API surface this repo uses.
+
+``shard_map`` moved twice across jax releases:
+
+* old:  ``jax.experimental.shard_map.shard_map(f, mesh, in_specs, out_specs,
+        check_rep=..., auto=...)`` — manual axes are *all* mesh axes except
+        ``auto``.
+* new:  ``jax.shard_map(f, mesh=..., in_specs=..., out_specs=...,
+        axis_names=..., check_vma=...)`` — manual axes are exactly
+        ``axis_names``.
+
+Every module in this repo imports ``shard_map`` from here and uses the *new*
+keyword surface (``axis_names`` / ``check_vma``); this shim translates to
+whichever implementation the installed jax provides.  ``axis_size`` (missing
+from old ``jax.lax``) is shimmed the same way.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+
+
+def pallas_tpu_compiler_params(**kwargs):
+    """``pltpu.CompilerParams`` across its rename from ``TPUCompilerParams``."""
+    from jax.experimental.pallas import tpu as pltpu
+    cls = getattr(pltpu, "CompilerParams", None)
+    if cls is None:  # pragma: no cover - depends on installed jax
+        cls = pltpu.TPUCompilerParams
+    return cls(**kwargs)
+
+
+if hasattr(jax.lax, "axis_size"):
+    axis_size = jax.lax.axis_size
+else:
+    def axis_size(axis_name) -> int:
+        """``jax.lax.axis_size`` fallback: psum of a concrete 1 is evaluated
+        statically, so this returns a Python int even under tracing."""
+        return jax.lax.psum(1, axis_name)
+
+try:  # jax >= 0.6-style top-level export
+    from jax import shard_map as _new_shard_map  # type: ignore[attr-defined]
+    _OLD_SHARD_MAP = None
+except ImportError:  # pragma: no cover - depends on installed jax
+    _new_shard_map = None
+    from jax.experimental.shard_map import shard_map as _OLD_SHARD_MAP
+
+
+def shard_map(f, mesh=None, in_specs=None, out_specs=None, *,
+              axis_names: Optional[Any] = None,
+              check_vma: Optional[bool] = None,
+              check_rep: Optional[bool] = None,
+              **kwargs):
+    """Portable ``shard_map`` accepting the new-API keyword surface."""
+    if _new_shard_map is not None:
+        if axis_names is not None:
+            kwargs["axis_names"] = axis_names
+        if check_vma is not None:
+            kwargs["check_vma"] = check_vma
+        elif check_rep is not None:
+            kwargs["check_vma"] = check_rep
+        return _new_shard_map(f, mesh=mesh, in_specs=in_specs,
+                              out_specs=out_specs, **kwargs)
+
+    # Old jax: partial-manual regions (``auto=`` axes) miscompile
+    # ``axis_index``/``ppermute`` bodies (PartitionId rejected by the SPMD
+    # partitioner).  Fall back to a fully-manual region instead: axes the
+    # specs never mention are treated as replicated, which is numerically
+    # identical (the boundary reshard gathers/re-scatters them).
+    kwargs.pop("auto", None)
+    rep = True
+    if check_vma is not None:
+        rep = check_vma
+    elif check_rep is not None:
+        rep = check_rep
+    return _OLD_SHARD_MAP(f, mesh=mesh, in_specs=in_specs,
+                          out_specs=out_specs, check_rep=rep,
+                          **kwargs)

@@ -34,7 +34,9 @@ from typing import Literal
 import jax
 import jax.numpy as jnp
 
-PsumMode = Literal["ina", "ina_ring", "eject_inject", "xla"]
+from repro.compat import axis_size
+
+PsumMode = Literal["ina", "ina_ring", "eject_inject", "xla", "auto"]
 
 
 # --------------------------------------------------------------------------- #
@@ -42,7 +44,7 @@ PsumMode = Literal["ina", "ina_ring", "eject_inject", "xla"]
 # --------------------------------------------------------------------------- #
 def ring_psum_eject_inject(x: jax.Array, axis_name: str) -> jax.Array:
     """Unchunked ring all-reduce: P-1 full-tensor hops with endpoint adds."""
-    p = jax.lax.axis_size(axis_name)
+    p = axis_size(axis_name)
     if p == 1:
         return x
     perm = [(i, (i + 1) % p) for i in range(p)]
@@ -62,7 +64,7 @@ def ring_reduce_scatter_ina(x: jax.Array, axis_name: str,
     """In-network accumulation: each hop adds its contribution to the moving
     1/P chunk and forwards it.  Device ``i`` returns fully-reduced chunk ``i``.
     """
-    p = jax.lax.axis_size(axis_name)
+    p = axis_size(axis_name)
     if p == 1:
         return x
     if x.shape[scatter_axis] % p != 0:
@@ -91,7 +93,7 @@ def ring_reduce_scatter_ina(x: jax.Array, axis_name: str,
 def ring_all_gather(x: jax.Array, axis_name: str, gather_axis: int = 0,
                     ) -> jax.Array:
     """Ring all-gather (P-1 hops of |x| each); inverse of the scatter."""
-    p = jax.lax.axis_size(axis_name)
+    p = axis_size(axis_name)
     if p == 1:
         return x
     i = jax.lax.axis_index(axis_name)
@@ -148,11 +150,40 @@ def psum_xla(x: jax.Array, axis_name: str) -> jax.Array:
 
 
 # --------------------------------------------------------------------------- #
+# Simulated-mesh cost bridge: PsumMode selection driven by the NoC subsystem
+# (repro.core.noc.collective.cost) instead of the per-link formulas below.
+# --------------------------------------------------------------------------- #
+def mesh_psum_costs(p: int, nbytes: int):
+    """Simulated mesh allreduce cost per PsumMode (latency cycles, pJ)."""
+    from repro.core.noc.collective.cost import psum_mode_costs
+    return psum_mode_costs(p, nbytes)
+
+
+def choose_psum_mode(p: int, nbytes: int,
+                     objective: str = "latency") -> PsumMode:
+    """Best PsumMode for a ``p``-device axis by simulated mesh cost."""
+    from repro.core.noc.collective.cost import choose_psum_mode as _choose
+    return _choose(p, nbytes, objective=objective)
+
+
+# --------------------------------------------------------------------------- #
 # Mode dispatch used by the tensor-parallel layers.
 # --------------------------------------------------------------------------- #
 def psum_with_mode(x: jax.Array, axis_name: str, mode: PsumMode,
                    scatter_axis: int = 0) -> jax.Array:
-    """Fully-reduced psum under the selected accumulation strategy."""
+    """Fully-reduced psum under the selected accumulation strategy.
+
+    ``mode="auto"`` resolves at trace time to the strategy with the best
+    *simulated mesh* cost for this tensor size and axis span (the sizes are
+    static under jit, so the NoC simulation runs once per shape).
+    """
+    if mode == "auto":
+        p = axis_size(axis_name)
+        mode = choose_psum_mode(p, x.nbytes)
+        if mode == "ina_ring" and x.shape[scatter_axis] % p != 0:
+            # The chunked ring needs the scatter axis to divide; fall back
+            # to the compiler-scheduled in-network reduce, which doesn't.
+            mode = "ina"
     if mode == "eject_inject":
         return ring_psum_eject_inject(x, axis_name)
     if mode == "ina_ring":
@@ -165,11 +196,13 @@ def psum_with_mode(x: jax.Array, axis_name: str, mode: PsumMode,
 def reduce_scatter_with_mode(x: jax.Array, axis_name: str, mode: PsumMode,
                              scatter_axis: int = 0) -> jax.Array:
     """Reduce-scattered psum (output stays sharded on ``scatter_axis``)."""
+    if mode == "auto":
+        mode = choose_psum_mode(axis_size(axis_name), x.nbytes)
     if mode == "eject_inject":
         # The baseline has no in-network reduction: full all-reduce, then the
         # caller's shard is sliced out locally (the ejected copy).
         full = ring_psum_eject_inject(x, axis_name)
-        p = jax.lax.axis_size(axis_name)
+        p = axis_size(axis_name)
         i = jax.lax.axis_index(axis_name)
         c = x.shape[scatter_axis] // p
         return jax.lax.dynamic_slice_in_dim(full, i * c, c, axis=scatter_axis)
@@ -190,7 +223,7 @@ def per_link_bytes(mode: PsumMode, p: int, nbytes: int,
         return 0.0
     if mode == "eject_inject":
         return (p - 1) * nbytes
-    if mode in ("ina", "ina_ring", "xla"):
+    if mode in ("ina", "ina_ring", "xla", "auto"):
         rs = (p - 1) / p * nbytes
         return rs * 2 if need_full else rs
     raise ValueError(mode)

@@ -1,0 +1,126 @@
+"""Cost-model facade: simulated mesh latency/energy for collectives.
+
+This is the bridge between the NoC subsystem and the JAX side:
+``core.collectives`` / ``parallel.tp`` ask *"what would this psum cost on
+the mesh?"* and get numbers from the same event-driven simulator that
+reproduces the paper's Figs. 7-12, instead of hand-derived per-link traffic
+formulas.  Results are cached — programs for a given (op, participants,
+payload, semantics) are deterministic.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from dataclasses import dataclass
+from functools import lru_cache
+from typing import Iterable, Optional
+
+from ..router import NocConfig
+from .engine import run_program
+from .schedule import plan_collective
+from .trees import full_mesh, mesh_row
+
+Coord = tuple[int, int]
+
+#: How each JAX-side psum mode maps onto a mesh collective.
+PSUM_MODE_LOWERING = {
+    "eject_inject": ("reduce_bcast", "eject_inject"),
+    "ina_ring": ("rs_ag", "ina"),
+    "ina": ("reduce_bcast", "ina"),
+    "xla": ("reduce_bcast", "ina"),
+}
+
+
+@dataclass(frozen=True)
+class CollectiveCost:
+    """Simulated cost of one collective on the mesh."""
+
+    op: str
+    algorithm: str
+    semantics: str
+    n: int                      # mesh dimension
+    participants: int
+    payload_bits: float
+    latency_cycles: int
+    energy_pj: float
+    packets: int
+
+    @property
+    def power_pj_per_cycle(self) -> float:
+        return self.energy_pj / max(self.latency_cycles, 1)
+
+
+@lru_cache(maxsize=4096)
+def _simulate(op: str, parts: tuple[Coord, ...], payload_bits: float,
+              cfg: NocConfig, root: Optional[Coord], algorithm: str,
+              semantics: str, order: str) -> tuple[int, float, int]:
+    prog = plan_collective(op, parts, payload_bits, cfg, root=root,
+                           algorithm=algorithm, semantics=semantics,
+                           order=order)
+    res = run_program(prog, cfg)
+    return (res.latency_cycles, res.network_energy_pj(cfg),
+            sum(1 for o in prog if o.flits))
+
+
+def collective_cost(op: str, payload_bits: float,
+                    cfg: NocConfig = NocConfig(), *,
+                    participants: Optional[Iterable[Coord]] = None,
+                    root: Optional[Coord] = None,
+                    algorithm: str = "reduce_bcast",
+                    semantics: str = "ina",
+                    order: str = "xy") -> CollectiveCost:
+    """Plan + simulate one collective; ``participants`` defaults to the
+    full ``cfg.n`` x ``cfg.n`` mesh.  ``payload_bits`` is per participant.
+    """
+    parts = tuple(sorted(participants)) if participants is not None \
+        else tuple(full_mesh(cfg.n))
+    lat, energy, packets = _simulate(op, parts, float(payload_bits), cfg,
+                                     root, algorithm, semantics, order)
+    return CollectiveCost(op=op, algorithm=algorithm, semantics=semantics,
+                          n=cfg.n, participants=len(parts),
+                          payload_bits=float(payload_bits),
+                          latency_cycles=lat, energy_pj=energy,
+                          packets=packets)
+
+
+# --------------------------------------------------------------------------- #
+# psum-mode facade for the JAX side (a TP axis modelled as one mesh row)
+# --------------------------------------------------------------------------- #
+def _row_cfg(p: int, cfg: NocConfig) -> NocConfig:
+    return cfg if cfg.n >= p else dataclasses.replace(cfg, n=p)
+
+
+def psum_mode_costs(p: int, nbytes: int,
+                    cfg: NocConfig = NocConfig()) -> dict[str, CollectiveCost]:
+    """Simulated allreduce cost for every PsumMode over a ``p``-device TP
+    axis, embedded as one mesh row (the ring of the paper's datacenter
+    analogue laid out on NoC links)."""
+    if p <= 1:
+        zero = CollectiveCost("allreduce", "none", "none", cfg.n, 1,
+                              nbytes * 8, 0, 0.0, 0)
+        return {m: zero for m in PSUM_MODE_LOWERING}
+    rcfg = _row_cfg(p, cfg)
+    parts = mesh_row(p, 0)[:p]
+    out = {}
+    for mode, (algorithm, semantics) in PSUM_MODE_LOWERING.items():
+        out[mode] = collective_cost(
+            "allreduce", nbytes * 8, rcfg, participants=parts,
+            algorithm=algorithm, semantics=semantics)
+    return out
+
+
+def choose_psum_mode(p: int, nbytes: int, cfg: NocConfig = NocConfig(),
+                     objective: str = "latency") -> str:
+    """Pick the PsumMode with the best simulated mesh cost.
+
+    ``objective`` is ``"latency"`` or ``"energy"``.  ``"xla"`` is excluded
+    from the argmin (it lowers to the same schedule as ``"ina"`` but hides
+    the algorithm from the HLO); ties resolve toward the INA fast path.
+    """
+    if p <= 1:
+        return "ina"
+    costs = psum_mode_costs(p, nbytes, cfg)
+    key = (lambda c: c.latency_cycles) if objective == "latency" \
+        else (lambda c: c.energy_pj)
+    order = ("ina", "ina_ring", "eject_inject")
+    return min(order, key=lambda m: (key(costs[m]), order.index(m)))

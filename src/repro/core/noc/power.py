@@ -26,7 +26,13 @@ class Improvement:
 def ws_ina_improvement(name: str, layers: list[ConvLayer], e_pes: int,
                        cfg: NocConfig = NocConfig(), sim_rounds: int = 32,
                        ) -> Improvement:
-    """Fig. 7-9: WS+INA vs WS-without-INA."""
+    """Fig. 7-9: WS+INA vs WS-without-INA.
+
+    Both flows are schedules emitted by the collective planner
+    (``collective.schedule.ws_round_program``) and replayed on the program
+    engine; ``tests/test_noc_collective.py`` pins the results to the
+    pre-planner traffic generator cycle-exactly.
+    """
     base = simulate_network(layers, "ws_noina", cfg, e_pes, sim_rounds)
     ina = simulate_network(layers, "ws_ina", cfg, e_pes, sim_rounds)
     return Improvement(

@@ -37,7 +37,8 @@ class _Packet:
     vc: int
     inject: bool
     eject: bool
-    ina_hops: int
+    reduce_words: int
+    on_hop: Optional[Callable[[Coord, int], None]]
     on_done: Optional[Callable[[int], None]]
     links: list = field(default_factory=list)
     stage: int = -1          # -1 = inject, 0..len(links)-1 = hop i, len = eject
@@ -59,18 +60,31 @@ class NocSim:
     # ------------------------------------------------------------------ #
     def enqueue(self, t: int, src: Coord, dst: Coord, flits: int, *,
                 vc: int = 0, inject: bool = True, eject: bool = True,
-                ina_hops: int = 0,
-                on_done: Optional[Callable[[int], None]] = None) -> None:
-        """Schedule a packet to become ready at time ``t``."""
-        pkt = _Packet(src, dst, flits, vc, inject, eject, ina_hops, on_done)
-        pkt.links = links_of(xy_route(src, dst))
+                reduce_words: int = 0,
+                on_hop: Optional[Callable[[Coord, int], None]] = None,
+                on_done: Optional[Callable[[int], None]] = None,
+                path: Optional[list] = None) -> None:
+        """Schedule a packet to become ready at time ``t``.
+
+        ``reduce_words`` is the generic in-network reduce count: the number
+        of operand words folded into this packet by router ALUs along its
+        path (the INA block of the paper, the gather/reduce units of
+        collective-capable routers).  ``on_hop(node, t_head)`` fires as the
+        head flit enters each traversed router — the collective engine uses
+        it to timestamp in-passing payload deliveries (multicast drops).
+        ``path`` overrides the XY route (must start at ``src`` and end at
+        ``dst``).
+        """
+        pkt = _Packet(src, dst, flits, vc, inject, eject, reduce_words,
+                      on_hop, on_done)
+        pkt.links = links_of(path if path is not None else xy_route(src, dst))
         pkt.stage = -1 if inject else 0
         pkt.head = t
         # Energy that is path-determined (independent of contention):
         self.ledger.flit_routers += flits * (len(pkt.links) + 1)
         self.ledger.flit_links += flits * len(pkt.links)
         self.ledger.packet_hops += len(pkt.links)
-        self.ledger.router_adds += ina_hops
+        self.ledger.router_adds += reduce_words
         if inject:
             self.ledger.ni_flits += flits
             self.ledger.packets_built += 1
@@ -114,6 +128,8 @@ class NocSim:
                 self.link_free[link] = ready + pkt.flits
                 pkt.head = ready + cfg.link_cycles
                 pkt.stage += 1
+                if pkt.on_hop is not None:
+                    pkt.on_hop(link[1], pkt.head)
                 self._push(pkt.head, pkt)
                 continue
 

@@ -37,6 +37,21 @@ def xy_route(src: tuple[int, int], dst: tuple[int, int]) -> list[tuple[int, int]
     return path
 
 
+def yx_route(src: tuple[int, int], dst: tuple[int, int]) -> list[tuple[int, int]]:
+    """Dimension-ordered YX route (vertical dimension resolved first)."""
+    return [(x, y) for y, x in xy_route(src[::-1], dst[::-1])]
+
+
+def route(src: tuple[int, int], dst: tuple[int, int],
+          order: str = "xy") -> list[tuple[int, int]]:
+    """Dimension-ordered route under the given dimension order."""
+    if order == "xy":
+        return xy_route(src, dst)
+    if order == "yx":
+        return yx_route(src, dst)
+    raise ValueError(f"unknown route order: {order!r}")
+
+
 def links_of(path: list[tuple[int, int]]) -> list[tuple[tuple[int, int], tuple[int, int]]]:
     """Directed links traversed along a node path."""
     return list(zip(path[:-1], path[1:]))

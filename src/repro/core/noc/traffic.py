@@ -135,58 +135,27 @@ def _os_weight_stream_round(plan: _Plan, layer: ConvLayer, cfg: NocConfig,
 
 
 # --------------------------------------------------------------------------- #
-# Accumulation + gather rounds (event-driven simulation, window + extrapolate)
+# Accumulation + gather rounds (planner-emitted schedule, event-driven replay)
 # --------------------------------------------------------------------------- #
 def _sim_rounds_window(plan: _Plan, cfg: NocConfig, mode: str, window: int,
                        e_pes: int = 1) -> tuple[float, EnergyLedger]:
-    """Simulate ``window`` back-to-back rounds; return (makespan, ledger)."""
+    """Simulate ``window`` back-to-back rounds; return (makespan, ledger).
+
+    The per-round traffic — column gather packets with in-network
+    accumulation (``ws_ina``/``os_gather``) or Fig. 4(a) relay chains gated
+    before the collection (``ws_noina``) — is emitted by the collective
+    planner (:func:`~repro.core.noc.collective.schedule.ws_round_program`)
+    and replayed by the program engine on the shared simulator.
+    """
+    from .collective.engine import run_program
+    from .collective.schedule import ws_round_program
+
     sim = NocSim(cfg)
-    n = cfg.n
-    port_row = n - 1                       # per-column memory port at south edge
-
-    def launch_gather(x: int, t: int) -> None:
-        # Shared column gather packet ([12]) on VC1; with INA it also
-        # accumulates every chain in-network on its way south.
-        ina_hops = plan.g * (plan.p - 1) if mode == "ws_ina" else 0
-        sim.enqueue(t, (x, 0), (x, port_row), plan.gather_flits,
-                    vc=1, inject=True, eject=True, ina_hops=ina_hops)
-        # Result words entering the gather payload via the tails' NIs
-        # (identical in both modes).
-        sim.ledger.ni_flits += plan.gather_flits - 1
-        if mode == "ws_ina":
-            # Chain operands (one psum word per non-tail member) are
-            # deposited into the INA block through the local NI.
-            words = plan.g * (plan.p - 1) * e_pes
-            sim.ledger.ni_flits += words * cfg.gather_payload_bits / cfg.flit_bits
-
-    for _ in range(window):
-        for x in range(n):
-            if mode == "ws_noina" and plan.p > 1:
-                # Relay chains must finish before the gather departs (this
-                # serial dependency is exactly what INA removes).
-                pend = {"left": plan.g, "latest": 0}
-
-                def chain_done(td: int, pend=pend, x=x) -> None:
-                    pend["left"] -= 1
-                    pend["latest"] = max(pend["latest"], td)
-                    if pend["left"] == 0:
-                        if cfg.baseline_collection == "per_chain_unicast":
-                            for g in range(plan.g):
-                                tail = (x, g * plan.p + plan.p - 1)
-                                sim.enqueue(pend["latest"], tail, (x, port_row),
-                                            plan.unicast_flits, vc=1,
-                                            inject=True, eject=True)
-                        else:
-                            launch_gather(x, pend["latest"])
-
-                for g in range(plan.g):
-                    chain = [(x, g * plan.p + r) for r in range(plan.p)]
-                    sim.chain_eject_inject(0, chain, plan.unicast_flits,
-                                           on_done=chain_done)
-            else:
-                launch_gather(x, 0)
-    makespan = sim.run()
-    return float(makespan), sim.ledger
+    prog = ws_round_program(cfg, mode, window, g=plan.g, p=plan.p,
+                            gather_flits=plan.gather_flits,
+                            unicast_flits=plan.unicast_flits, e_pes=e_pes)
+    res = run_program(prog, cfg, sim=sim)
+    return float(res.latency_cycles), sim.ledger
 
 
 def _accum_phase(plan: _Plan, cfg: NocConfig, mode: str,

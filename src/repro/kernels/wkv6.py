@@ -13,6 +13,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.compat import pallas_tpu_compiler_params
+
 
 def _kernel(r_ref, k_ref, v_ref, w_ref, u_ref, o_ref, state_ref, *,
             chunk: int):
@@ -78,7 +80,7 @@ def wkv6(r: jax.Array, k: jax.Array, v: jax.Array, logw: jax.Array,
         out_specs=pl.BlockSpec((1, chunk, hd), lambda b, c: (b, c, 0)),
         scratch_shapes=[pltpu.VMEM((hd, hd), jnp.float32)],
         out_shape=jax.ShapeDtypeStruct((bh, s, hd), r.dtype),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=pallas_tpu_compiler_params(
             dimension_semantics=("parallel", "arbitrary")),
         interpret=interpret,
     )(r, k, v, logw, u3)

@@ -134,8 +134,9 @@ def moe_mlp(p: dict, x: jax.Array, cfg: ModelConfig,
     if pctx is not None and pctx.manual:
         n_shards = pctx.mesh.shape[pctx.axis]
         e_local = e // n_shards
-        from jax import shard_map
         from jax.sharding import PartitionSpec as P
+
+        from repro.compat import shard_map
         from repro.core.collectives import psum_with_mode
 
         def body(xt, gi, po, ke, gv, wg, wu, wd):

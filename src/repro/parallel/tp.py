@@ -12,6 +12,10 @@ accumulation strategy is selectable:
                             (the paper's algorithm, visible in HLO)
   * ``mode="eject_inject"`` — full-tensor relay ring with endpoint adds
                             (the paper's Fig. 4(a) baseline)
+  * ``mode="auto"``       — resolved per call site at trace time by the NoC
+                            collective cost model (simulated mesh latency of
+                            each strategy for this tensor size / axis span;
+                            see repro.core.noc.collective.cost)
   * ``mode="xla_spmd"``   — no shard_map at all: plain einsum, GSPMD chooses
 
 The shard_map regions are *partial*: only the ``model`` axis is manual; the
@@ -25,8 +29,9 @@ from typing import Optional
 
 import jax
 import jax.numpy as jnp
-from jax import shard_map
 from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.compat import shard_map
 
 from repro.core.collectives import psum_with_mode
 
@@ -36,6 +41,7 @@ class ParallelCtx:
     """How model-axis parallelism is executed inside the forward pass."""
     mesh: Optional[Mesh] = None
     psum_mode: str = "xla_spmd"   # xla_spmd | ina | ina_ring | eject_inject
+                                  # | auto (NoC-simulated cost picks per site)
     axis: str = "model"
     seq_shard: bool = True        # Megatron-style sequence-sharded activations
     rs_seq: bool = False          # row-parallel psum -> reduce-scatter(seq):

@@ -20,6 +20,8 @@ from typing import Literal, Optional
 import jax
 import jax.numpy as jnp
 
+from repro.compat import axis_size
+
 Codec = Literal["none", "int8", "topk"]
 
 
@@ -69,7 +71,7 @@ def compressed_psum(grads, state: CompressionState, axis: str,
                     codec: Codec = "int8", topk_frac: float = 0.05):
     """psum ``grads`` over ``axis`` under the codec; must run inside
     shard_map with ``axis`` bound.  Returns (reduced_grads, new_state)."""
-    n = jax.lax.axis_size(axis)
+    n = axis_size(axis)
 
     def leaf(g, e):
         if codec == "none" or g.ndim == 0:

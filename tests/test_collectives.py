@@ -17,8 +17,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, PartitionSpec as P
-from jax import shard_map
 from functools import partial
+
+from repro.compat import shard_map
 
 from repro.core.collectives import (per_link_bytes, psum_ina, psum_with_mode,
                                     reduce_scatter_with_mode,

@@ -3,7 +3,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import assume, given, settings, strategies as st
+from _hypothesis_compat import assume, given, settings, strategies as st
 from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.core.ina_model import ConvLayer, ina_rounds, needs_ina, p_num
