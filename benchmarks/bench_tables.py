@@ -1,19 +1,13 @@
-"""Paper Tables I & II: INA round counts per CONV layer."""
-from repro.core.ina_model import ina_table
-from repro.core.workloads import ALEXNET, VGG16
+"""Paper Tables I & II: INA round counts per CONV layer.
+
+Thin wrapper over :mod:`repro.experiments` (the sweep subsystem); kept for
+the ``benchmarks/run.py`` CSV contract.
+"""
+from repro.experiments.sweeps import tables_csv_lines
 
 
 def run() -> list[str]:
-    lines = []
-    for name, layers, n_list in (("alexnet", ALEXNET, (8, 16)),
-                                 ("vgg16", VGG16, (8, 16))):
-        for n in n_list:
-            for row in ina_table(layers, n=n):
-                ina = row["INA#"] if row["INA#"] is not None else "NA"
-                lines.append(
-                    f"table_{name}_N{n},{row['layer']},P#={row['P#']},"
-                    f"INA#={ina}")
-    return lines
+    return tables_csv_lines()
 
 
 if __name__ == "__main__":

@@ -1,28 +1,16 @@
-"""Paper Figs 7-9: WS+INA vs WS-without-INA latency/power improvement."""
-import time
+"""Paper Figs 7-9: WS+INA vs WS-without-INA latency/power improvement.
 
-from repro.core.noc.power import ws_ina_improvement
-from repro.core.workloads import WORKLOADS
+Thin wrapper over :mod:`repro.experiments` (the sweep subsystem); kept for
+the ``benchmarks/run.py`` CSV contract.
+"""
+import dataclasses
+
+from repro.experiments.sweeps import DEFAULT_SWEEP, fig7_9_csv_lines
 
 
 def run(sim_rounds: int = 16) -> list[str]:
-    lines = []
-    lat_all, enr_all = [], []
-    for name, layers in WORKLOADS.items():
-        for e in (1, 2, 4, 8):
-            t0 = time.time()
-            imp = ws_ina_improvement(name, layers, e, sim_rounds=sim_rounds)
-            us = (time.time() - t0) * 1e6
-            lat_all.append(imp.latency_x)
-            enr_all.append(imp.energy_x)
-            lines.append(f"fig7_9_{name}_E{e},{us:.0f},"
-                         f"latency_x={imp.latency_x:.3f};"
-                         f"energy_x={imp.energy_x:.3f};"
-                         f"power_x={imp.power_x:.3f}")
-    lines.append(f"fig7_9_average,0,latency_x={sum(lat_all)/len(lat_all):.3f};"
-                 f"energy_x={sum(enr_all)/len(enr_all):.3f};"
-                 f"paper=1.22x_latency_2.16x_power")
-    return lines
+    sweep = dataclasses.replace(DEFAULT_SWEEP, sim_rounds=sim_rounds)
+    return fig7_9_csv_lines(sweep)
 
 
 if __name__ == "__main__":

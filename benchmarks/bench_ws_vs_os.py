@@ -1,23 +1,16 @@
-"""Paper Figs 10-12: WS+INA vs OS-with-gather latency/power improvement."""
-import time
+"""Paper Figs 10-12: WS+INA vs OS-with-gather latency/power improvement.
 
-from repro.core.noc.power import ws_vs_os_improvement
-from repro.core.workloads import WORKLOADS
+Thin wrapper over :mod:`repro.experiments` (the sweep subsystem); kept for
+the ``benchmarks/run.py`` CSV contract.
+"""
+import dataclasses
+
+from repro.experiments.sweeps import DEFAULT_SWEEP, fig10_12_csv_lines
 
 
 def run(sim_rounds: int = 16) -> list[str]:
-    lines = []
-    for name, layers in WORKLOADS.items():
-        for e in (1, 2, 4, 8):
-            t0 = time.time()
-            imp = ws_vs_os_improvement(name, layers, e, sim_rounds=sim_rounds)
-            us = (time.time() - t0) * 1e6
-            lines.append(f"fig10_12_{name}_E{e},{us:.0f},"
-                         f"latency_x={imp.latency_x:.3f};"
-                         f"energy_x={imp.energy_x:.3f};"
-                         f"power_x={imp.power_x:.3f}")
-    lines.append("fig10_12_note,0,paper=up_to_1.19x_latency_2.16x_power")
-    return lines
+    sweep = dataclasses.replace(DEFAULT_SWEEP, sim_rounds=sim_rounds)
+    return fig10_12_csv_lines(sweep)
 
 
 if __name__ == "__main__":

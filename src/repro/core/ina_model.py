@@ -93,6 +93,11 @@ def ina_table(layers: list[ConvLayer], n: int, e_pes_per_router: int = 1,
 
 
 def total_ina_rounds(layers: list[ConvLayer], n: int, e: int = 1,
-                     m_bits: int = DEFAULT_M_BITS) -> int:
-    """Total accumulation rounds for a whole network (NA layers contribute 0)."""
-    return sum(ina_rounds(l, n, e, m_bits) or 0 for l in layers)
+                     m_bits: int = DEFAULT_M_BITS,
+                     q_bits: int = DEFAULT_Q_BITS) -> int:
+    """Total accumulation rounds for a whole network (NA layers contribute 0).
+
+    ``q_bits`` is forwarded to :func:`ina_rounds` like every other Eq. (1)-(4)
+    helper, so mixed-precision sweeps (q=8/16) flip Eq. (1) consistently.
+    """
+    return sum(ina_rounds(l, n, e, m_bits, q_bits) or 0 for l in layers)

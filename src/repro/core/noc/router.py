@@ -7,6 +7,7 @@ the calibration note.
 """
 from __future__ import annotations
 
+import math
 from dataclasses import dataclass
 
 
@@ -62,8 +63,13 @@ class NocConfig:
         return self.e_buf_write + self.e_buf_read + self.e_xbar
 
     def payload_flits(self, payload_bits: float) -> int:
-        """Flits needed for a payload (excluding the header flit)."""
-        return max(1, -(-int(payload_bits) // self.flit_bits))
+        """Flits needed for a payload (excluding the header flit).
+
+        Ceils on the *float* bit count: reuse-scaled payloads are fractional,
+        and truncating before the ceiling division undercounts (128.5 bits
+        must occupy 2 flits of 128, not 1).
+        """
+        return max(1, math.ceil(payload_bits / self.flit_bits))
 
     def unicast_flits(self, e_pes: int) -> int:
         """Unicast psum packet: header + E psum words (Table III: 2-3 flits)."""

@@ -1,0 +1,92 @@
+"""Plan-keyed memoization for the event-driven WS/OS round simulator.
+
+:func:`~repro.core.noc.traffic._sim_rounds_window` replays a window of
+accumulation/gather rounds whose traffic depends only on the *plan shape* —
+``(cfg, mode, window, g, p, gather_flits, unicast_flits, e_pes)`` — and not
+on the layer identity.  Whole-network sweeps therefore re-simulate the same
+window program once per layer (ResNet-50 alone is ~53 layers, ~40 of which
+share the degenerate P#=1 shape), and the paper's full Figs 7-12 evaluation
+(3 workloads x 4 E values x 3 modes) repeats a handful of distinct programs
+hundreds of times.
+
+This module is the keyed cache that collapses those repeats, extending the
+facade pattern of :mod:`repro.core.noc.collective.cost` (which memoizes
+``plan_collective`` + ``run_program`` per collective signature) down to the
+WS dataflow windows.  Invalidation is structural: :class:`NocConfig` is a
+frozen dataclass and a full member of the key, so any timing/energy-constant
+change hashes to a different entry — there is nothing to flush when a sweep
+varies ``n``, ``e_pes`` or energy constants.
+
+Entries store ``(latency, EnergyLedger)``.  Ledgers are mutable event-count
+accumulators, so the cache keeps a private copy and hands out a fresh copy
+per hit (``EnergyLedger.scaled(1.0)`` — exact for floats), keeping cached
+runs bit-identical to uncached ones (see ``tests/test_experiments.py``).
+"""
+from __future__ import annotations
+
+from contextlib import contextmanager
+from typing import Hashable, Optional
+
+from .router import EnergyLedger
+
+#: Cache key of one simulated window: (cfg, mode, window, g, p,
+#: gather_flits, unicast_flits, e_pes).
+WindowKey = Hashable
+
+
+class SimCache:
+    """Keyed store of ``(latency_cycles, EnergyLedger)`` window results."""
+
+    def __init__(self, enabled: bool = True) -> None:
+        self.enabled = enabled
+        self.hits = 0
+        self.misses = 0
+        self._store: dict[WindowKey, tuple[float, EnergyLedger]] = {}
+
+    def get(self, key: WindowKey) -> Optional[tuple[float, EnergyLedger]]:
+        if not self.enabled:
+            return None
+        hit = self._store.get(key)
+        if hit is None:
+            self.misses += 1
+            return None
+        self.hits += 1
+        t, ledger = hit
+        return t, ledger.scaled(1.0)
+
+    def put(self, key: WindowKey, latency: float, ledger: EnergyLedger) -> None:
+        if self.enabled:
+            self._store[key] = (latency, ledger.scaled(1.0))
+
+    def clear(self) -> None:
+        self.hits = self.misses = 0
+        self._store.clear()
+
+    def __len__(self) -> int:
+        return len(self._store)
+
+    def stats(self) -> dict:
+        return {"enabled": self.enabled, "entries": len(self._store),
+                "hits": self.hits, "misses": self.misses}
+
+
+#: Process-wide cache consulted by ``_sim_rounds_window``.
+SIM_CACHE = SimCache()
+
+
+def configure(enabled: bool) -> None:
+    """Globally enable/disable the window cache (clears it when disabling)."""
+    SIM_CACHE.enabled = enabled
+    if not enabled:
+        SIM_CACHE.clear()
+
+
+@contextmanager
+def sim_cache_disabled():
+    """Temporarily bypass the cache (ground-truth runs in tests/benchmarks)."""
+    prev = SIM_CACHE.enabled
+    SIM_CACHE.enabled = False
+    try:
+        yield
+    finally:
+        SIM_CACHE.enabled = prev

@@ -35,6 +35,7 @@ from dataclasses import dataclass
 
 from ..ina_model import ConvLayer, p_num
 from .router import EnergyLedger, NocConfig
+from .simcache import SIM_CACHE
 from .simulator import NocSim
 
 MODES = ("ws_ina", "ws_noina", "os_gather")
@@ -146,15 +147,26 @@ def _sim_rounds_window(plan: _Plan, cfg: NocConfig, mode: str, window: int,
     before the collection (``ws_noina``) — is emitted by the collective
     planner (:func:`~repro.core.noc.collective.schedule.ws_round_program`)
     and replayed by the program engine on the shared simulator.
+
+    Results are memoized per plan shape in :data:`~repro.core.noc.simcache.
+    SIM_CACHE` — the window program depends on the key below and not on the
+    layer identity, so whole-network sweeps replay each distinct program
+    once (see EXPERIMENTS.md for the cache design).
     """
     from .collective.engine import run_program
     from .collective.schedule import ws_round_program
 
+    key = (cfg, mode, window, plan.g, plan.p, plan.gather_flits,
+           plan.unicast_flits, e_pes)
+    hit = SIM_CACHE.get(key)
+    if hit is not None:
+        return hit
     sim = NocSim(cfg)
     prog = ws_round_program(cfg, mode, window, g=plan.g, p=plan.p,
                             gather_flits=plan.gather_flits,
                             unicast_flits=plan.unicast_flits, e_pes=e_pes)
     res = run_program(prog, cfg, sim=sim)
+    SIM_CACHE.put(key, float(res.latency_cycles), sim.ledger)
     return float(res.latency_cycles), sim.ledger
 
 
@@ -163,13 +175,18 @@ def _accum_phase(plan: _Plan, cfg: NocConfig, mode: str,
     rounds = plan.rounds
     if rounds <= 0:
         return 0.0, EnergyLedger()
-    w_big = min(rounds, sim_rounds)
+    w_big = min(rounds, max(1, sim_rounds))   # at least one simulated round
     t_big, led_big = _sim_rounds_window(plan, cfg, mode, w_big, e_pes)
     if rounds <= w_big:
         return t_big, led_big
     w_small = max(1, w_big // 2)
-    t_small, _ = _sim_rounds_window(plan, cfg, mode, w_small, e_pes)
-    marginal = (t_big - t_small) / (w_big - w_small)
+    if w_small == w_big:
+        # Single-round window (sim_rounds=1): no second measurement point;
+        # the whole window is one round, so it *is* the marginal period.
+        marginal = t_big / w_big
+    else:
+        t_small, _ = _sim_rounds_window(plan, cfg, mode, w_small, e_pes)
+        marginal = (t_big - t_small) / (w_big - w_small)
     return t_big + (rounds - w_big) * marginal, led_big.scaled(rounds / w_big)
 
 

@@ -1,0 +1,14 @@
+"""Paper-evaluation sweep engine (Tables I/II, Figs 7-12, scaling studies).
+
+``python -m repro.experiments`` runs the complete evaluation of the INA
+paper through the plan-keyed simulation cache and emits per-figure JSON
+plus a markdown summary into ``results/`` — see EXPERIMENTS.md for the CLI
+and the cache design.  The ``benchmarks/bench_tables.py`` /
+``bench_ws_ina.py`` / ``bench_ws_vs_os.py`` entry points are thin wrappers
+over this package.
+"""
+from .sweeps import (DEFAULT_SWEEP, QUICK_SWEEP, SweepConfig, run_all,
+                     run_fig7_9, run_fig10_12, run_mesh_scaling, run_tables)
+
+__all__ = ["SweepConfig", "DEFAULT_SWEEP", "QUICK_SWEEP", "run_tables",
+           "run_fig7_9", "run_fig10_12", "run_mesh_scaling", "run_all"]

@@ -1,0 +1,99 @@
+"""CLI: reproduce the paper's evaluation into ``results/``.
+
+Usage (see EXPERIMENTS.md):
+
+    PYTHONPATH=src python -m repro.experiments                 # full sweep
+    PYTHONPATH=src python -m repro.experiments --quick         # CI smoke
+    PYTHONPATH=src python -m repro.experiments --sections fig7_9,fig10_12
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import sys
+
+from repro.core.noc import simcache
+
+from .sweeps import (DEFAULT_SWEEP, QUICK_SWEEP, SECTIONS, SweepConfig,
+                     run_all)
+
+
+def _int_tuple(s: str) -> tuple[int, ...]:
+    return tuple(int(x) for x in s.split(",") if x)
+
+
+def main(argv: list[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.experiments",
+        description="Run the paper's evaluation sweeps (Tables I/II, "
+                    "Figs 7-12, mesh scaling) and write JSON + markdown "
+                    "artifacts.")
+    ap.add_argument("--quick", action="store_true",
+                    help="CI smoke shape: sim_rounds=4, E in {1,4}, "
+                         "N in {4,8}")
+    ap.add_argument("--out", default="results",
+                    help="output directory (default: results/)")
+    ap.add_argument("--sections", default=",".join(SECTIONS),
+                    help=f"comma-separated subset of {SECTIONS}")
+    ap.add_argument("--sim-rounds", type=int, default=None,
+                    help="override the simulated window length")
+    ap.add_argument("--e", type=_int_tuple, default=None, metavar="E1,E2,..",
+                    help="override the PEs-per-router sweep")
+    ap.add_argument("--n", type=_int_tuple, default=None, metavar="N1,N2,..",
+                    help="override the mesh-size sweep")
+    ap.add_argument("--workloads", default=None,
+                    help="comma-separated subset of alexnet,vgg16,resnet50")
+    ap.add_argument("--no-cache", action="store_true",
+                    help="bypass the plan-keyed window cache (ground truth)")
+    args = ap.parse_args(argv)
+
+    sweep: SweepConfig = QUICK_SWEEP if args.quick else DEFAULT_SWEEP
+    overrides = {}
+    if args.sim_rounds is not None:
+        if args.sim_rounds < 1:
+            ap.error("--sim-rounds must be >= 1")
+        overrides["sim_rounds"] = args.sim_rounds
+    for flag, value in (("--e", args.e), ("--n", args.n)):
+        if value is not None and (not value or min(value) < 1):
+            ap.error(f"{flag} needs at least one positive value")
+    if args.e is not None:
+        overrides["e_list"] = args.e
+    if args.n is not None:
+        overrides["n_list"] = args.n
+    if args.workloads is not None:
+        from repro.core.workloads import WORKLOADS
+        workloads = tuple(w for w in args.workloads.split(",") if w)
+        unknown = [w for w in workloads if w not in WORKLOADS]
+        if unknown or not workloads:
+            ap.error(f"unknown workloads {unknown}; "
+                     f"pick from {sorted(WORKLOADS)}")
+        overrides["workloads"] = workloads
+    if overrides:
+        sweep = dataclasses.replace(sweep, **overrides)
+
+    if args.no_cache:
+        simcache.configure(False)
+    sections = tuple(s for s in args.sections.split(",") if s)
+    unknown = [s for s in sections if s not in SECTIONS]
+    if unknown:
+        ap.error(f"unknown sections {unknown}; pick from {SECTIONS}")
+    results = run_all(sweep, out_dir=args.out, sections=sections)
+    meta = results["_meta"]
+    for section in sections:
+        fig = results[section]
+        line = f"{section}: {len(fig['rows'])} rows"
+        if "average" in fig:
+            avg = fig["average"]
+            line += (f"  (avg latency_x={avg['latency_x']:.3f}, "
+                     f"power_x={avg['power_x']:.3f}, "
+                     f"energy_x={avg['energy_x']:.3f})")
+        print(line)
+    cache = meta["cache"]
+    print(f"artifacts in {args.out}/ (summary.md, benchmarks.csv, "
+          f"per-section JSON); cache: {cache['entries']} entries, "
+          f"{cache['hits']} hits / {cache['misses']} misses")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

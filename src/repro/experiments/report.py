@@ -1,0 +1,64 @@
+"""Markdown summary for a sweep run (written as ``results/summary.md``)."""
+from __future__ import annotations
+
+
+def _ratio_table(rows: list[dict], extra_cols: tuple[str, ...] = ()) -> str:
+    cols = list(extra_cols) + ["workload", "e_pes",
+                               "latency_x", "power_x", "energy_x"]
+    head = "| " + " | ".join(cols) + " |"
+    rule = "|" + "|".join("---" for _ in cols) + "|"
+    body = []
+    for r in rows:
+        cells = [f"{r[c]:.3f}" if isinstance(r[c], float) else str(r[c])
+                 for c in cols]
+        body.append("| " + " | ".join(cells) + " |")
+    return "\n".join([head, rule] + body)
+
+
+def _tables_table(rows: list[dict]) -> str:
+    head = "| network | N | layer | P# | INA# |"
+    rule = "|---|---|---|---|---|"
+    body = [f"| {r['network']} | {r['n']} | {r['layer']} | {r['P#']} | "
+            f"{r['INA#'] if r['INA#'] is not None else 'NA'} |"
+            for r in rows]
+    return "\n".join([head, rule] + body)
+
+
+def summary_markdown(results: dict) -> str:
+    """Render the dict returned by :func:`~.sweeps.run_all` as markdown."""
+    parts = ["# Paper-evaluation sweep summary", ""]
+    meta = results.get("_meta", {})
+    sweep = meta.get("sweep", {})
+    if sweep:
+        parts += [f"Sweep: `sim_rounds={sweep.get('sim_rounds')}`, "
+                  f"E ∈ {sweep.get('e_list')}, N ∈ {sweep.get('n_list')}, "
+                  f"workloads {sweep.get('workloads')}", ""]
+    for section in ("fig7_9", "fig10_12"):
+        fig = results.get(section)
+        if not fig:
+            continue
+        parts += [f"## {section} — {fig['paper_reference']}", "",
+                  _ratio_table(fig["rows"]), ""]
+        avg = fig.get("average")
+        if avg:
+            parts += [f"**Simulated average:** latency_x="
+                      f"{avg['latency_x']:.3f}, power_x={avg['power_x']:.3f},"
+                      f" energy_x={avg['energy_x']:.3f}", ""]
+    fig = results.get("mesh_scaling")
+    if fig:
+        parts += [f"## mesh_scaling — {fig['paper_reference']}", "",
+                  _ratio_table(fig["rows"], extra_cols=("n",)), ""]
+    fig = results.get("tables")
+    if fig:
+        parts += [f"## Tables I & II — {fig['paper_reference']}", "",
+                  _tables_table(fig["rows"]), ""]
+    if meta:
+        cache = meta.get("cache", {})
+        timings = meta.get("elapsed_s", {})
+        parts += ["## Run stats", "",
+                  "Section timings: " + ", ".join(
+                      f"{k} {v:.2f}s" for k, v in timings.items()),
+                  f"Window cache: {cache.get('entries')} entries, "
+                  f"{cache.get('hits')} hits / {cache.get('misses')} misses "
+                  f"(see EXPERIMENTS.md)", ""]
+    return "\n".join(parts)

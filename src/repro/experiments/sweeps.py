@@ -1,0 +1,219 @@
+"""The paper's full evaluation as one cached, resumable sweep subsystem.
+
+Every figure/table of the source paper is a function from a
+:class:`SweepConfig` to a JSON-ready dict:
+
+* :func:`run_tables`      — Tables I & II (P#, INA# per CONV layer, N=8/16)
+* :func:`run_fig7_9`      — Figs 7-9: WS+INA vs WS-without-INA, E sweep
+* :func:`run_fig10_12`    — Figs 10-12: WS+INA vs OS-with-gather, E sweep
+* :func:`run_mesh_scaling`— beyond the paper: mesh-size N x E scaling
+
+All simulation goes through :func:`repro.core.noc.traffic.simulate_network`
+and therefore through the plan-keyed window cache
+(:mod:`repro.core.noc.simcache`): a whole-network sweep replays each
+distinct window program once, so ResNet-50's ~53 layers cost a handful of
+event-driven runs.  :func:`run_all` writes per-figure JSON + a markdown
+summary into ``results/`` (see EXPERIMENTS.md).
+
+The ``*_csv_lines`` helpers emit the legacy ``name,us_per_call,derived``
+benchmark rows; ``benchmarks/bench_*.py`` delegate here.
+"""
+from __future__ import annotations
+
+import json
+import time
+from dataclasses import asdict, dataclass
+from pathlib import Path
+from typing import Callable, Optional
+
+from repro.core.ina_model import ina_table
+from repro.core.noc import NocConfig, SIM_CACHE
+from repro.core.noc.power import (Improvement, ws_ina_improvement,
+                                  ws_vs_os_improvement)
+from repro.core.workloads import ALEXNET, VGG16, WORKLOADS
+
+#: Paper-reported headline numbers, attached to every emitted figure.
+PAPER_REFERENCE = {
+    "tables": "Tables I & II: P#/INA# per CONV layer (M=32Kbit, q=32)",
+    "fig7_9": "paper: up to 1.22x latency / 2.16x power, WS+INA vs WS",
+    "fig10_12": "paper: up to 1.19x latency / 2.16x power, WS+INA vs OS",
+    "mesh_scaling": "beyond the paper: N x E scaling of the WS+INA gain",
+}
+
+SECTIONS = ("tables", "fig7_9", "fig10_12", "mesh_scaling")
+
+
+@dataclass(frozen=True)
+class SweepConfig:
+    """Shape of one full-evaluation sweep (defaults match the paper)."""
+
+    e_list: tuple[int, ...] = (1, 2, 4, 8)      # PEs per router (Eq. 4)
+    n_list: tuple[int, ...] = (4, 8, 16)        # mesh sizes (scaling study)
+    table_n_list: tuple[int, ...] = (8, 16)     # Tables I/II mesh sizes
+    sim_rounds: int = 16                        # simulated window length
+    workloads: tuple[str, ...] = ("alexnet", "vgg16", "resnet50")
+
+    def cfg(self, n: Optional[int] = None) -> NocConfig:
+        return NocConfig() if n is None else NocConfig(n=n)
+
+
+DEFAULT_SWEEP = SweepConfig()
+#: CI smoke shape: small windows, two E points, no N=16 mesh.
+QUICK_SWEEP = SweepConfig(e_list=(1, 4), n_list=(4, 8), sim_rounds=4,
+                          workloads=("alexnet", "vgg16", "resnet50"))
+
+
+def _imp_row(imp: Improvement, **extra) -> dict:
+    row = {"workload": imp.workload, "e_pes": imp.e_pes,
+           "latency_x": imp.latency_x, "power_x": imp.power_x,
+           "energy_x": imp.energy_x}
+    row.update(extra)
+    return row
+
+
+# --------------------------------------------------------------------------- #
+# Sections
+# --------------------------------------------------------------------------- #
+def run_tables(sweep: SweepConfig = DEFAULT_SWEEP) -> dict:
+    """Tables I & II: analytical P#/INA# rows per CONV layer and mesh size."""
+    rows = []
+    for name, layers in (("alexnet", ALEXNET), ("vgg16", VGG16)):
+        for n in sweep.table_n_list:
+            for r in ina_table(layers, n=n):
+                rows.append({"network": name, "n": n, **r})
+    return {"figure": "tables", "paper_reference": PAPER_REFERENCE["tables"],
+            "rows": rows}
+
+
+def _run_fig(figure: str, sweep: SweepConfig,
+             improve: Callable[..., Improvement]) -> dict:
+    rows = []
+    for name in sweep.workloads:
+        for e in sweep.e_list:
+            t0 = time.time()
+            imp = improve(name, WORKLOADS[name], e, sweep.cfg(),
+                          sweep.sim_rounds)
+            rows.append(_imp_row(imp, elapsed_us=(time.time() - t0) * 1e6))
+    avg = {k: sum(r[k] for r in rows) / len(rows)
+           for k in ("latency_x", "power_x", "energy_x")}
+    return {"figure": figure, "paper_reference": PAPER_REFERENCE[figure],
+            "sim_rounds": sweep.sim_rounds, "rows": rows, "average": avg}
+
+
+def run_fig7_9(sweep: SweepConfig = DEFAULT_SWEEP) -> dict:
+    """Figs 7-9: WS+INA improvement over WS-without-INA across workloads/E."""
+    return _run_fig("fig7_9", sweep, ws_ina_improvement)
+
+
+def run_fig10_12(sweep: SweepConfig = DEFAULT_SWEEP) -> dict:
+    """Figs 10-12: WS+INA improvement over OS-with-gather across workloads/E."""
+    return _run_fig("fig10_12", sweep, ws_vs_os_improvement)
+
+
+def run_mesh_scaling(sweep: SweepConfig = DEFAULT_SWEEP) -> dict:
+    """N x E scaling of the WS+INA gain (the paper only reports N=8)."""
+    rows = [_imp_row(ws_ina_improvement(name, WORKLOADS[name], e,
+                                        sweep.cfg(n), sweep.sim_rounds), n=n)
+            for n in sweep.n_list for name in sweep.workloads
+            for e in sweep.e_list]
+    return {"figure": "mesh_scaling",
+            "paper_reference": PAPER_REFERENCE["mesh_scaling"],
+            "sim_rounds": sweep.sim_rounds, "rows": rows}
+
+
+_RUNNERS: dict[str, Callable[[SweepConfig], dict]] = {
+    "tables": run_tables, "fig7_9": run_fig7_9,
+    "fig10_12": run_fig10_12, "mesh_scaling": run_mesh_scaling,
+}
+
+
+# --------------------------------------------------------------------------- #
+# Legacy benchmark CSV rows (``name,us_per_call,derived``)
+# --------------------------------------------------------------------------- #
+def _table_csv_row(r: dict) -> str:
+    ina = r["INA#"] if r["INA#"] is not None else "NA"
+    return (f"table_{r['network']}_N{r['n']},{r['layer']},"
+            f"P#={r['P#']},INA#={ina}")
+
+
+def tables_csv_lines(sweep: SweepConfig = DEFAULT_SWEEP) -> list[str]:
+    return [_table_csv_row(r) for r in run_tables(sweep)["rows"]]
+
+
+def _fig_section_csv(section: str, fig: dict) -> list[str]:
+    """Legacy rows + tail line for one computed fig7_9/fig10_12 dict (the
+    single emitter shared by the bench wrappers and ``run_all``)."""
+    lines = [(f"{section}_{r['workload']}_E{r['e_pes']},"
+              f"{r.get('elapsed_us', 0.0):.0f},"
+              f"latency_x={r['latency_x']:.3f};"
+              f"energy_x={r['energy_x']:.3f};"
+              f"power_x={r['power_x']:.3f}") for r in fig["rows"]]
+    if section == "fig7_9":
+        avg = fig["average"]
+        lines.append(f"fig7_9_average,0,latency_x={avg['latency_x']:.3f};"
+                     f"energy_x={avg['energy_x']:.3f};"
+                     f"paper=1.22x_latency_2.16x_power")
+    else:
+        lines.append("fig10_12_note,0,paper=up_to_1.19x_latency_2.16x_power")
+    return lines
+
+
+def fig7_9_csv_lines(sweep: SweepConfig = DEFAULT_SWEEP) -> list[str]:
+    return _fig_section_csv("fig7_9", run_fig7_9(sweep))
+
+
+def fig10_12_csv_lines(sweep: SweepConfig = DEFAULT_SWEEP) -> list[str]:
+    return _fig_section_csv("fig10_12", run_fig10_12(sweep))
+
+
+# --------------------------------------------------------------------------- #
+# Full run: JSON per figure + markdown summary + benchmark CSV
+# --------------------------------------------------------------------------- #
+def run_all(sweep: SweepConfig = DEFAULT_SWEEP,
+            out_dir: str | Path = "results",
+            sections: tuple[str, ...] = SECTIONS,
+            write_csv: bool = True) -> dict:
+    """Run ``sections`` of the evaluation; write artifacts into ``out_dir``.
+
+    Returns ``{section: figure_dict}`` plus ``_meta`` (timings + cache
+    stats).  Artifacts: ``<section>.json`` per section, ``summary.md``,
+    and (``write_csv``) ``benchmarks.csv`` with the legacy fig7-12 rows.
+    """
+    from .report import summary_markdown
+
+    out = Path(out_dir)
+    out.mkdir(parents=True, exist_ok=True)
+    results: dict = {}
+    timings: dict[str, float] = {}
+    cache_before = SIM_CACHE.stats()
+    for section in sections:
+        if section not in _RUNNERS:
+            raise ValueError(f"unknown section {section!r}; "
+                             f"pick from {SECTIONS}")
+        t0 = time.time()
+        fig = _RUNNERS[section](sweep)
+        timings[section] = time.time() - t0
+        results[section] = fig
+        (out / f"{section}.json").write_text(json.dumps(fig, indent=2))
+    # Report cache activity as deltas so the artifact describes *this* run
+    # even when earlier work in the process warmed the process-wide cache.
+    cache_after = SIM_CACHE.stats()
+    cache = {"enabled": cache_after["enabled"],
+             "entries": cache_after["entries"],
+             **{k: cache_after[k] - cache_before[k]
+                for k in ("hits", "misses")}}
+    results["_meta"] = {"sweep": asdict(sweep), "elapsed_s": timings,
+                        "cache": cache}
+    (out / "summary.md").write_text(summary_markdown(results))
+    if write_csv:
+        # Derived from the rows computed above — nothing is re-simulated;
+        # the timing column carries the per-section wall time instead of
+        # per-call timings (use the bench_*.py scripts for those).
+        csv = ["name,us_per_call,derived"]
+        if "tables" in sections:
+            csv += [_table_csv_row(r) for r in results["tables"]["rows"]]
+        for section in ("fig7_9", "fig10_12"):
+            if section in sections:
+                csv += _fig_section_csv(section, results[section])
+        (out / "benchmarks.csv").write_text("\n".join(csv) + "\n")
+    return results

@@ -86,6 +86,18 @@ def test_resnet50_mostly_fits():
     assert total_ina_rounds(VGG16, 8) > total_ina_rounds(ALEXNET, 8)
 
 
+def test_total_ina_rounds_forwards_q_bits():
+    """Regression: total_ina_rounds silently dropped q_bits — q=8 must flip
+    Eq. (1) for every AlexNet layer (C*R*R*8 < 32768 throughout) and shrink
+    the VGG-16 total (only the C=512 layers still split)."""
+    assert total_ina_rounds(ALEXNET, 8, q_bits=8) != total_ina_rounds(ALEXNET, 8)
+    assert total_ina_rounds(ALEXNET, 8, q_bits=8) == 0
+    assert not needs_ina(ALEXNET[1], q_bits=8)          # Eq. (1) flipped
+    assert 0 < total_ina_rounds(VGG16, 8, q_bits=8) < total_ina_rounds(VGG16, 8)
+    # Default q matches the explicit 32-bit call (consistency with ina_rounds).
+    assert total_ina_rounds(VGG16, 8) == total_ina_rounds(VGG16, 8, q_bits=32)
+
+
 def test_table_shape():
     rows = ina_table(ALEXNET, n=8)
     assert [r["layer"] for r in rows] == [l.name for l in ALEXNET]

@@ -103,6 +103,40 @@ def test_gather_flit_sizes_match_table_iii():
     assert CFG.unicast_flits(8) == 3
 
 
+def test_payload_flits_ceils_fractional_bits():
+    """Regression: fractional payloads (reuse-scaled floats) must ceil on the
+    float, not truncate first — 128.5 bits needs 2 flits of 128."""
+    assert CFG.payload_flits(128.5) == 2
+    assert CFG.payload_flits(128.0) == 1
+    assert CFG.payload_flits(129) == 2
+    assert CFG.payload_flits(0.25) == 1          # max(1, ...) floor survives
+    assert CFG.payload_flits(0) == 1
+    assert CFG.payload_flits(256) == 2
+
+
+def test_single_window_extrapolation_sim_rounds_1():
+    """Regression: sim_rounds=1 on a multi-round layer used to divide by
+    zero in _accum_phase (w_small == w_big == 1); the single window's period
+    now serves as the marginal."""
+    conv2 = ALEXNET[1]                            # plan.rounds = 4374 >> 1
+    r1 = simulate_layer(conv2, "ws_ina", CFG, 1, sim_rounds=1)
+    assert r1.latency_cycles > 0
+    # The one-window marginal includes the full pipeline fill (no overlap
+    # between rounds is observable from one round), so it can only
+    # overestimate the steady-state extrapolation — never under.
+    r16 = simulate_layer(conv2, "ws_ina", CFG, 1, sim_rounds=16)
+    assert r16.latency_cycles <= r1.latency_cycles
+    # Exact contract of the fallback: marginal = t_window / 1, so the accum
+    # phase extrapolates to rounds * t_window on top of the fill barrier.
+    plan = _plan(conv2, CFG, 1, "ws_ina")
+    t_window, _ = _sim_rounds_window(plan, CFG, "ws_ina", 1)
+    assert r1.latency_cycles == pytest.approx(
+        r1.fill_cycles + plan.rounds * t_window)
+    # sim_rounds=0 clamps to one simulated round instead of dividing by zero.
+    r0 = simulate_layer(conv2, "ws_ina", CFG, 1, sim_rounds=0)
+    assert r0.latency_cycles == r1.latency_cycles
+
+
 # --------------------------------------------------------------------------- #
 # Paper headline bands (Figs 7-9 / 10-12); see EXPERIMENTS.md for calibration.
 # --------------------------------------------------------------------------- #
