@@ -1,0 +1,16 @@
+"""Mapper search: paper-fixed vs auto-searched mapping ratios.
+
+Thin wrapper over :func:`repro.experiments.sweeps.mapper_csv_lines` (quick
+search space, short windows) kept for the ``benchmarks/run.py`` CSV
+contract; use ``python -m repro.experiments --section mapper`` for the full
+Pareto artifact.
+"""
+from repro.experiments.sweeps import QUICK_SWEEP, mapper_csv_lines
+
+
+def run() -> list[str]:
+    return mapper_csv_lines(QUICK_SWEEP)
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

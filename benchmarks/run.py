@@ -1,27 +1,101 @@
-# One function per paper table. Print ``name,us_per_call,derived`` CSV.
+# One function per paper table / subsystem section.  Prints the
+# ``name,us_per_call,derived`` CSV; section failures become an attributable
+# ``<section>_error`` row *and* a nonzero exit code (CI must not mistake a
+# broken section for a clean sweep).
+import argparse
 import os
 import sys
 
+# Direct-script invocation (`python benchmarks/run.py`) puts benchmarks/ at
+# sys.path[0]; the repo root (benchmarks package) and src/ (repro package)
+# must both be importable.
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+sys.path.insert(0, os.path.join(_ROOT, "src"))
+sys.path.insert(0, _ROOT)
 
-def main() -> None:
-    from benchmarks import (bench_collectives, bench_kernels, bench_tables,
-                            bench_ws_ina, bench_ws_vs_os)
+
+def _tables():
+    from benchmarks import bench_tables
+    return bench_tables.run()
+
+
+def _ws_ina():
+    from benchmarks import bench_ws_ina
+    return bench_ws_ina.run()
+
+
+def _ws_vs_os():
+    from benchmarks import bench_ws_vs_os
+    return bench_ws_vs_os.run()
+
+
+def _kernels():
+    from benchmarks import bench_kernels
+    return bench_kernels.run()
+
+
+def _collectives():
+    from benchmarks import bench_collectives
+    return bench_collectives.run()
+
+
+def _mapper():
+    from benchmarks import bench_mapper
+    return bench_mapper.run()
+
+
+def _roofline():
+    if not os.path.exists("results/dryrun_singlepod.json"):
+        return ["roofline_skipped,0,run_launch/dryrun_first"]
+    from benchmarks import roofline
+    return roofline.run()
+
+
+SECTIONS = {
+    "tables": _tables,
+    "ws_ina": _ws_ina,
+    "ws_vs_os": _ws_vs_os,
+    "kernels": _kernels,
+    "collectives": _collectives,
+    "mapper": _mapper,
+    "roofline": _roofline,
+}
+
+
+def _error_row(section: str, exc: Exception) -> str:
+    # Keep the CSV parseable: no commas/newlines in the derived column.
+    msg = f"{type(exc).__name__}: {exc}".replace(",", ";")
+    msg = " ".join(msg.split())[:160]
+    return f"{section}_error,0,{msg}"
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        description="Run benchmark sections; print name,us_per_call,derived "
+                    "CSV rows.")
+    ap.add_argument("--sections", "--section", dest="sections",
+                    default=",".join(SECTIONS),
+                    help=f"comma-separated subset of {tuple(SECTIONS)}")
+    args = ap.parse_args(argv)
+    sections = [s for s in args.sections.split(",") if s]
+    unknown = [s for s in sections if s not in SECTIONS]
+    if unknown:
+        ap.error(f"unknown sections {unknown}; pick from {tuple(SECTIONS)}")
+
     lines = ["name,us_per_call,derived"]
-    lines += bench_tables.run()
-    lines += bench_ws_ina.run()
-    lines += bench_ws_vs_os.run()
-    lines += bench_kernels.run()
-    lines += bench_collectives.run()
-    try:
-        from benchmarks import roofline
-        if os.path.exists("results/dryrun_singlepod.json"):
-            lines += roofline.run()
-        else:
-            lines.append("roofline_skipped,0,run_launch/dryrun_first")
-    except Exception as e:                                  # noqa: BLE001
-        lines.append(f"roofline_error,0,{type(e).__name__}")
+    failed = []
+    for section in sections:
+        try:
+            lines += SECTIONS[section]()
+        except Exception as e:                              # noqa: BLE001
+            failed.append(section)
+            lines.append(_error_row(section, e))
     print("\n".join(lines))
+    if failed:
+        print(f"benchmark sections failed: {', '.join(failed)}",
+              file=sys.stderr)
+    return 1 if failed else 0
 
 
 if __name__ == '__main__':
-    main()
+    sys.exit(main())

@@ -12,6 +12,11 @@ precision:
 
 Note (paper anomaly, see DESIGN.md S7): Tables I/II say "M = 32KB" but only
 reproduce with M = 32 Kbit = 32768 bits; we default to 32768.
+
+The Eq. (1)-(4) helpers only touch a layer's R/C/F and output count, so they
+accept any shape exposing that interface — :class:`ConvLayer` here, and the
+GEMM shapes of :mod:`repro.core.ops` (R=1, C=K, F=N, outputs=M), which is
+what lets the mapper search FC and transformer layers with the same model.
 """
 from __future__ import annotations
 
@@ -36,9 +41,14 @@ class ConvLayer:
     stride: int = 1
 
     @property
+    def outputs(self) -> int:
+        """Output activations per filter (the O x O pixels)."""
+        return self.O * self.O
+
+    @property
     def macs(self) -> int:
         """MAC count for the layer (one input image)."""
-        return self.R * self.R * self.C * self.F * self.O * self.O
+        return self.R * self.R * self.C * self.F * self.outputs
 
     @property
     def weight_bits(self) -> int:
@@ -71,10 +81,18 @@ def ina_rounds(layer: ConvLayer, n: int, e_pes_per_router: int = 1,
     p = p_num(layer, m_bits, q_bits)
     groups = n // p                      # floor(N / P#): filter groups per mesh row
     if groups == 0:
-        # A filter spans more than one mesh row of PEs; chain across rows.
-        # The paper's tables never hit this case; treat the whole row as one group.
-        groups = 1
-    return math.ceil((layer.F / (n * e_pes_per_router)) * (layer.O * layer.O / groups))
+        # A filter's chain is taller than the mesh (P# > N): the paper's
+        # tables never hit this case, but the mapper's search space (GEMM
+        # reductions, small mesh columns) does.  The column accumulates the
+        # filter in ceil(P#/N) sequential passes of N chained PEs each
+        # (partial results parked at the port PE between passes), so every
+        # output costs that many gather rounds — clamping to one group, as
+        # the old fallback did, undercounts rounds by the pass factor.
+        passes = math.ceil(p / n)
+        return passes * math.ceil((layer.F / (n * e_pes_per_router))
+                                  * layer.outputs)
+    return math.ceil((layer.F / (n * e_pes_per_router))
+                     * (layer.outputs / groups))
 
 
 def ina_table(layers: list[ConvLayer], n: int, e_pes_per_router: int = 1,

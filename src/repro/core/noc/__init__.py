@@ -12,8 +12,8 @@ from .router import NocConfig
 from .simcache import SIM_CACHE, SimCache, sim_cache_disabled
 from .topology import Mesh, route, xy_route, yx_route
 from .simulator import NocSim
-from .traffic import LayerResult, simulate_layer, simulate_network
+from .traffic import LayerResult, layer_plan, simulate_layer, simulate_network
 
 __all__ = ["NocConfig", "Mesh", "route", "xy_route", "yx_route", "NocSim",
-           "LayerResult", "simulate_layer", "simulate_network",
+           "LayerResult", "layer_plan", "simulate_layer", "simulate_network",
            "SIM_CACHE", "SimCache", "sim_cache_disabled"]

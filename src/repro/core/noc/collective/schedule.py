@@ -517,9 +517,13 @@ def ws_round_program(cfg: NocConfig, mode: str, window: int, *, g: int,
     ``cfg.baseline_collection``.  Op order matches the legacy traffic
     generator exactly so link arbitration (and therefore latency/energy)
     is reproduced cycle-for-cycle.
+
+    Rectangular meshes (mapper search space): columns are ``cfg.width``
+    gather flows of ``cfg.height`` routers each; chain placement requires
+    ``g * p <= cfg.height`` (the traffic planner guarantees it).
     """
-    n = cfg.n
-    port_row = n - 1                   # per-column memory port at south edge
+    width = cfg.width
+    port_row = cfg.height - 1          # per-column memory port at south edge
     prog: list[PacketOp] = []
 
     def gather_op(x: int, deps: tuple[int, ...]) -> PacketOp:
@@ -536,7 +540,7 @@ def ws_round_program(cfg: NocConfig, mode: str, window: int, *, g: int,
                         extra_ni_flits=extra, deps=deps, tag="ws:gather")
 
     for _ in range(window):
-        for x in range(n):
+        for x in range(width):
             if mode == "ws_noina" and p > 1:
                 tails = []
                 for gi in range(g):

@@ -11,10 +11,13 @@ import math
 from dataclasses import dataclass
 
 
+from typing import Optional
+
+
 @dataclass(frozen=True)
 class NocConfig:
     # ---- Table III timing ---------------------------------------------------
-    n: int = 8                      # mesh dimension (8x8)
+    n: int = 8                      # mesh width W in columns (8x8 square)
     router_cycles: int = 4          # router pipeline depth
     link_cycles: int = 1            # link traversal
     flit_bits: int = 128            # flit size
@@ -57,6 +60,26 @@ class NocConfig:
     e_add32: float = 0.1            # 32-bit digital add (router INA block / PE ALU)
     e_stream_bus: float = 1.6       # per flit-segment on the streaming bus (wire)
     e_mac: float = 0.8              # per MAC in the PE (common to all modes)
+
+    # ---- mesh shape (mapper search space; DESIGN.md S9) ----------------------
+    # Mesh height H in rows; None keeps the paper's square N x N.  The WS
+    # placement puts chains in columns (height) and streams over rows (width),
+    # so rectangular meshes trade chain capacity against column count.
+    rows: Optional[int] = None
+
+    @property
+    def width(self) -> int:
+        """Mesh width W (columns)."""
+        return self.n
+
+    @property
+    def height(self) -> int:
+        """Mesh height H (rows); equals ``n`` for the paper's square mesh."""
+        return self.rows if self.rows is not None else self.n
+
+    @property
+    def num_nodes(self) -> int:
+        return self.width * self.height
 
     @property
     def e_router_flit(self) -> float:

@@ -2,23 +2,38 @@
 from __future__ import annotations
 
 from dataclasses import dataclass
+from typing import Optional
 
 
 @dataclass(frozen=True)
 class Mesh:
-    """An N x N 2D mesh.  Nodes are (x, y) with x = column, y = row."""
+    """A W x H 2D mesh.  Nodes are (x, y) with x = column, y = row.
+
+    ``n`` is the width in columns; ``rows`` is the height (None = square,
+    the paper's N x N).  Rectangular shapes are part of the mapper's search
+    space (DESIGN.md S9).
+    """
 
     n: int
+    rows: Optional[int] = None
+
+    @property
+    def width(self) -> int:
+        return self.n
+
+    @property
+    def height(self) -> int:
+        return self.rows if self.rows is not None else self.n
 
     def node_id(self, x: int, y: int) -> int:
-        return y * self.n + x
+        return y * self.width + x
 
     def coords(self, nid: int) -> tuple[int, int]:
-        return nid % self.n, nid // self.n
+        return nid % self.width, nid // self.width
 
     @property
     def num_nodes(self) -> int:
-        return self.n * self.n
+        return self.width * self.height
 
 
 def xy_route(src: tuple[int, int], dst: tuple[int, int]) -> list[tuple[int, int]]:

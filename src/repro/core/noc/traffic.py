@@ -32,8 +32,9 @@ from __future__ import annotations
 
 import math
 from dataclasses import dataclass
+from typing import Optional
 
-from ..ina_model import ConvLayer, p_num
+from ..ina_model import DEFAULT_Q_BITS, ConvLayer, p_num
 from .router import EnergyLedger, NocConfig
 from .simcache import SIM_CACHE
 from .simulator import NocSim
@@ -65,36 +66,66 @@ class LayerResult:
 
 @dataclass
 class _Plan:
-    p: int                    # P#: PEs per chain
+    p: int                    # P#: PEs per chain (clamped to the column height)
     g: int                    # chains per column
     rounds: int               # accumulation/gather rounds for the whole layer
     fills: int                # weight (re)distribution phases
+    passes: int               # sequential chain segments when P# > height
     unicast_flits: int
     gather_flits: int
+    weight_bits: int              # whole-filter weight bits at the plan's q
     weight_bits_per_router: int   # per fill
 
 
-def _plan(layer: ConvLayer, cfg: NocConfig, e_pes: int, mode: str) -> _Plan:
-    n = cfg.n
-    p = min(p_num(layer), n) if mode.startswith("ws") else 1
-    g = max(1, n // p)
+def _plan(layer: ConvLayer, cfg: NocConfig, e_pes: int, mode: str,
+          q_bits: int = DEFAULT_Q_BITS, groups: Optional[int] = None) -> _Plan:
+    """Lay ``layer`` onto the (possibly rectangular) mesh under ``mode``.
+
+    ``q_bits`` scales the weight precision through Eqs. (1)-(2); ``groups``
+    overrides the chains-per-column count G (mapper search axis; clamped to
+    the feasible 1..H//P# range).  Defaults reproduce the paper's fixed
+    placement bit-for-bit.  When a filter's chain is taller than a column
+    (P# > H — GEMM reductions, small meshes), the column accumulates it in
+    ``ceil(P#/H)`` sequential passes of H chained PEs, matching the
+    ``ina_rounds`` multi-row-chain model.
+    """
+    w, h = cfg.width, cfg.height
+    weight_bits = layer.C * layer.R * layer.R * q_bits
     if mode.startswith("ws"):
-        rounds = math.ceil((layer.F / (n * e_pes)) * (layer.O * layer.O / g))
-        fills = max(1, math.ceil(layer.F / (n * g * e_pes)))
-        w_bits_router = math.ceil(layer.weight_bits / p) * e_pes
+        p_req = p_num(layer, q_bits=q_bits)
+        p = min(p_req, h)
+        passes = math.ceil(p_req / h)
+        if passes > 1:
+            g = 1
+            rounds = passes * math.ceil((layer.F / (w * e_pes))
+                                        * layer.outputs)
+        else:
+            g = h // p if groups is None else max(1, min(groups, h // p))
+            rounds = math.ceil((layer.F / (w * e_pes)) * (layer.outputs / g))
+        fills = passes * max(1, math.ceil(layer.F / (w * g * e_pes)))
+        w_bits_router = math.ceil(weight_bits / p_req) * e_pes
     else:  # OS: whole filters per PE; re-streamed continuously (no stationarity).
-        rounds = math.ceil(layer.F * layer.O * layer.O / (n * n * e_pes))
+        p, g, passes = 1, max(1, h), 1
+        rounds = math.ceil(layer.F * layer.outputs / (w * h * e_pes))
         fills = 0
-        w_bits_router = layer.weight_bits * e_pes
+        w_bits_router = weight_bits * e_pes
     # Gather packet sized by the results it collects: one per chain (G) per
     # router-PE (E).  For P#=1 layers this reproduces Table III's static
     # 3/5/9(/17)-flit gather packets (8 nodes x E results on the 8x8 mesh).
     return _Plan(
-        p=p, g=g, rounds=rounds, fills=fills,
+        p=p, g=g, rounds=rounds, fills=fills, passes=passes,
         unicast_flits=cfg.unicast_flits(e_pes),
         gather_flits=cfg.gather_flits(g * e_pes),
+        weight_bits=weight_bits,
         weight_bits_per_router=w_bits_router,
     )
+
+
+def layer_plan(layer: ConvLayer, cfg: NocConfig, e_pes: int, mode: str,
+               q_bits: int = DEFAULT_Q_BITS,
+               groups: Optional[int] = None) -> _Plan:
+    """Public planner entry point (the mapper prunes/replays from plans)."""
+    return _plan(layer, cfg, e_pes, mode, q_bits, groups)
 
 
 # --------------------------------------------------------------------------- #
@@ -102,36 +133,35 @@ def _plan(layer: ConvLayer, cfg: NocConfig, e_pes: int, mode: str) -> _Plan:
 # --------------------------------------------------------------------------- #
 def _fill_phase(plan: _Plan, cfg: NocConfig, ledger: EnergyLedger) -> float:
     """One WS weight-distribution barrier: all routers filled over row buses."""
-    n = cfg.n
+    w, h = cfg.width, cfg.height
     flits_per_router = cfg.payload_flits(plan.weight_bits_per_router)
-    # Each of the two bus directions serves n/2 routers, one flit per cycle.
-    cycles = (n // cfg.stream_buses_per_row) * flits_per_router
+    # Each of the two bus directions serves half a row's routers, one flit
+    # per cycle (rows are ``width`` routers long).
+    cycles = (w // cfg.stream_buses_per_row) * flits_per_router
     # Bus energy: every flit drives on average half its direction's segment.
-    ledger.stream_flit_segments += n * n * flits_per_router * max(1, n // 4)
+    ledger.stream_flit_segments += w * h * flits_per_router * max(1, w // 4)
     return float(cycles)
 
 
-def _input_stream_round(plan: _Plan, layer: ConvLayer, cfg: NocConfig,
+def _input_stream_round(plan: _Plan, cfg: NocConfig,
                         ledger: EnergyLedger) -> float:
     """Per-round input streaming (bus cycles per row); common to WS and OS."""
-    n = cfg.n
-    bits = layer.weight_bits / (plan.p * cfg.ws_input_reuse)
+    bits = plan.weight_bits / (plan.p * cfg.ws_input_reuse)
     flits = bits / cfg.flit_bits
-    ledger.stream_flit_segments += flits * n           # broadcast spans the row
+    ledger.stream_flit_segments += flits * cfg.width   # broadcast spans the row
     return flits / cfg.stream_buses_per_row
 
 
-def _os_weight_stream_round(plan: _Plan, layer: ConvLayer, cfg: NocConfig,
+def _os_weight_stream_round(plan: _Plan, cfg: NocConfig,
                             ledger: EnergyLedger) -> float:
     """Per-round OS weight re-streaming (bus cycles per row).
 
     OS keeps outputs stationary, so weights flow continuously; a streamed
     weight word is only reused ``os_weight_reuse``-wide (one assignment
-    wave), unlike WS where a distributed weight serves all O^2 pixels.
+    wave), unlike WS where a distributed weight serves all output pixels.
     """
-    n = cfg.n
-    flits = layer.weight_bits / (cfg.flit_bits * cfg.os_weight_reuse)
-    ledger.stream_flit_segments += flits * n
+    flits = plan.weight_bits / (cfg.flit_bits * cfg.os_weight_reuse)
+    ledger.stream_flit_segments += flits * cfg.width
     return flits / cfg.os_stream_bw
 
 
@@ -192,17 +222,23 @@ def _accum_phase(plan: _Plan, cfg: NocConfig, mode: str,
 
 # --------------------------------------------------------------------------- #
 def simulate_layer(layer: ConvLayer, mode: str, cfg: NocConfig = NocConfig(),
-                   e_pes: int = 1, sim_rounds: int = 32) -> LayerResult:
-    """Simulate one CONV layer under a dataflow mode; return latency/energy."""
+                   e_pes: int = 1, sim_rounds: int = 32,
+                   q_bits: int = DEFAULT_Q_BITS,
+                   groups: Optional[int] = None) -> LayerResult:
+    """Simulate one CONV/GEMM layer under a dataflow mode.
+
+    ``q_bits``/``groups`` are mapper search axes (see :func:`_plan`); the
+    defaults reproduce the paper's fixed placement.
+    """
     assert mode in MODES, mode
-    plan = _plan(layer, cfg, e_pes, mode)
+    plan = _plan(layer, cfg, e_pes, mode, q_bits, groups)
     stream_ledger = EnergyLedger()
 
     noc_cycles, noc_ledger = _accum_phase(plan, cfg, mode, sim_rounds, e_pes)
 
     # Per-round input streaming paces the steady state together with the NoC
     # (whichever is slower); its energy scales with rounds.
-    in_round = _input_stream_round(plan, layer, cfg, stream_ledger)
+    in_round = _input_stream_round(plan, cfg, stream_ledger)
     stream_ledger.stream_flit_segments *= max(plan.rounds, 1)
 
     if mode.startswith("ws"):
@@ -214,7 +250,7 @@ def simulate_layer(layer: ConvLayer, mode: str, cfg: NocConfig = NocConfig(),
         # OS overlaps weight+input distribution with execution (paper SIV.B):
         # the layer is paced by the slower of streaming and the gather NoC.
         tmp = EnergyLedger()
-        w_round = _os_weight_stream_round(plan, layer, cfg, tmp)
+        w_round = _os_weight_stream_round(plan, cfg, tmp)
         stream_ledger.stream_flit_segments += tmp.stream_flit_segments * plan.rounds
         fill_cycles = (w_round + in_round) * plan.rounds
         latency = max(fill_cycles, noc_cycles)
@@ -230,9 +266,11 @@ def simulate_layer(layer: ConvLayer, mode: str, cfg: NocConfig = NocConfig(),
 
 def simulate_network(layers: list[ConvLayer], mode: str,
                      cfg: NocConfig = NocConfig(), e_pes: int = 1,
-                     sim_rounds: int = 32) -> dict:
+                     sim_rounds: int = 32,
+                     q_bits: int = DEFAULT_Q_BITS) -> dict:
     """Whole-network totals (layers execute back-to-back, as in the paper)."""
-    results = [simulate_layer(l, mode, cfg, e_pes, sim_rounds) for l in layers]
+    results = [simulate_layer(l, mode, cfg, e_pes, sim_rounds, q_bits)
+               for l in layers]
     latency = sum(r.latency_cycles for r in results)
     noc_e = sum(r.noc_energy_pj for r in results)
     stream_e = sum(r.stream_energy_pj for r in results)

@@ -6,10 +6,18 @@ Layer shapes follow the papers the INA paper cites:
   * VGG-16 (ICLR'15) — matches Table II exactly.
   * ResNet-50 (CVPR'16) — the INA paper gives no table; we enumerate every
     CONV layer of the standard v1 bottleneck network.
+
+Beyond the paper (the mapper's front-end, see DESIGN.md S9): the FC layers
+the paper's tables omit (:data:`ALEXNET_FC` / :data:`VGG16_FC`, as
+:class:`~repro.core.ops.GemmLayer` shapes) and transformer projection/MLP
+GEMMs derived from the ``configs/`` model registry
+(:func:`mapper_workloads`).  ``WORKLOADS`` itself stays CONV-only — the
+fig7-12 pins depend on it.
 """
 from __future__ import annotations
 
 from .ina_model import ConvLayer
+from .ops import GemmLayer, LayerShape, transformer_gemms
 
 # --------------------------------------------------------------------------- #
 # AlexNet (Table I)
@@ -83,3 +91,47 @@ WORKLOADS: dict[str, list[ConvLayer]] = {
     "vgg16": VGG16,
     "resnet50": RESNET50,
 }
+
+
+# --------------------------------------------------------------------------- #
+# FC layers (single-image GEMMs the paper's tables leave out)
+# --------------------------------------------------------------------------- #
+ALEXNET_FC = [
+    GemmLayer("FC6", M=1, K=256 * 6 * 6, N=4096),
+    GemmLayer("FC7", M=1, K=4096, N=4096),
+    GemmLayer("FC8", M=1, K=4096, N=1000),
+]
+
+VGG16_FC = [
+    GemmLayer("FC14", M=1, K=512 * 7 * 7, N=4096),
+    GemmLayer("FC15", M=1, K=4096, N=4096),
+    GemmLayer("FC16", M=1, K=4096, N=1000),
+]
+
+FC_LAYERS: dict[str, list[GemmLayer]] = {
+    "alexnet": ALEXNET_FC,
+    "vgg16": VGG16_FC,
+}
+
+
+def full_workload(name: str) -> list[LayerShape]:
+    """CONV stack plus the FC tail (where the network has one)."""
+    return list(WORKLOADS[name]) + list(FC_LAYERS.get(name, []))
+
+
+def mapper_workloads(conv: tuple[str, ...] = ("alexnet", "vgg16", "resnet50"),
+                     transformers: tuple[str, ...] = ("llama3-8b",
+                                                      "qwen2-1.5b"),
+                     tokens: int = 256) -> dict[str, list[LayerShape]]:
+    """The mapper's workload set: FC-complete CNNs + transformer GEMM blocks.
+
+    ``transformers`` are ``configs/`` registry names; each contributes one
+    decoder block's q/k/v/o + gate/up/down GEMMs under the key
+    ``"<name>:gemm"`` (ratios are depth-invariant, see ``core.ops``).
+    """
+    out: dict[str, list[LayerShape]] = {n: full_workload(n) for n in conv}
+    if transformers:
+        from repro.configs import ARCHS
+        for t in transformers:
+            out[f"{t}:gemm"] = list(transformer_gemms(ARCHS[t], tokens))
+    return out

@@ -5,6 +5,7 @@ Usage (see EXPERIMENTS.md):
     PYTHONPATH=src python -m repro.experiments                 # full sweep
     PYTHONPATH=src python -m repro.experiments --quick         # CI smoke
     PYTHONPATH=src python -m repro.experiments --sections fig7_9,fig10_12
+    PYTHONPATH=src python -m repro.experiments --section mapper  # mapping search
 """
 from __future__ import annotations
 
@@ -33,7 +34,8 @@ def main(argv: list[str] | None = None) -> int:
                          "N in {4,8}")
     ap.add_argument("--out", default="results",
                     help="output directory (default: results/)")
-    ap.add_argument("--sections", default=",".join(SECTIONS),
+    ap.add_argument("--sections", "--section", dest="sections",
+                    default=",".join(SECTIONS),
                     help=f"comma-separated subset of {SECTIONS}")
     ap.add_argument("--sim-rounds", type=int, default=None,
                     help="override the simulated window length")

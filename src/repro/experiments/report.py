@@ -15,6 +15,17 @@ def _ratio_table(rows: list[dict], extra_cols: tuple[str, ...] = ()) -> str:
     return "\n".join([head, rule] + body)
 
 
+def _mapper_table(rows: list[dict]) -> str:
+    head = ("| workload | layers | best hw (WxHxE) | latency_x | energy_x | "
+            "util (paper -> auto) |")
+    rule = "|---|---|---|---|---|---|"
+    body = [(f"| {r['workload']} | {r['layers']} | {r['hardware']} | "
+             f"{r['latency_x']:.3f} | {r['energy_x']:.3f} | "
+             f"{r['paper_utilization']:.3f} -> {r['auto_utilization']:.3f} |")
+            for r in rows]
+    return "\n".join([head, rule] + body)
+
+
 def _tables_table(rows: list[dict]) -> str:
     head = "| network | N | layer | P# | INA# |"
     rule = "|---|---|---|---|---|"
@@ -48,6 +59,14 @@ def summary_markdown(results: dict) -> str:
     if fig:
         parts += [f"## mesh_scaling — {fig['paper_reference']}", "",
                   _ratio_table(fig["rows"], extra_cols=("n",)), ""]
+    fig = results.get("mapper")
+    if fig:
+        parts += [f"## mapper — {fig['paper_reference']}", "",
+                  _mapper_table(fig["rows"]), "",
+                  "Ratios are paper-fixed / auto-searched (>= 1 by the "
+                  "baseline-dominating selection; see DESIGN.md S9). "
+                  "Per-workload Pareto fronts and the winning "
+                  "`NetworkSchedule`s are in `mapper.json`.", ""]
     fig = results.get("tables")
     if fig:
         parts += [f"## Tables I & II — {fig['paper_reference']}", "",

@@ -38,9 +38,11 @@ PAPER_REFERENCE = {
     "fig7_9": "paper: up to 1.22x latency / 2.16x power, WS+INA vs WS",
     "fig10_12": "paper: up to 1.19x latency / 2.16x power, WS+INA vs OS",
     "mesh_scaling": "beyond the paper: N x E scaling of the WS+INA gain",
+    "mapper": "beyond the paper: searched mappings vs the fixed "
+              "Eq. (1)-(4) placement (DESIGN.md S9)",
 }
 
-SECTIONS = ("tables", "fig7_9", "fig10_12", "mesh_scaling")
+SECTIONS = ("tables", "fig7_9", "fig10_12", "mesh_scaling", "mapper")
 
 
 @dataclass(frozen=True)
@@ -52,6 +54,10 @@ class SweepConfig:
     table_n_list: tuple[int, ...] = (8, 16)     # Tables I/II mesh sizes
     sim_rounds: int = 16                        # simulated window length
     workloads: tuple[str, ...] = ("alexnet", "vgg16", "resnet50")
+    # ---- mapper section (DESIGN.md S9) -----------------------------------
+    mapper_space: str = "full"                  # "full" | "quick" MapperConfig
+    mapper_transformers: tuple[str, ...] = ("llama3-8b", "qwen2-1.5b")
+    mapper_tokens: int = 256                    # GEMM M tile per pass
 
     def cfg(self, n: Optional[int] = None) -> NocConfig:
         return NocConfig() if n is None else NocConfig(n=n)
@@ -60,7 +66,8 @@ class SweepConfig:
 DEFAULT_SWEEP = SweepConfig()
 #: CI smoke shape: small windows, two E points, no N=16 mesh.
 QUICK_SWEEP = SweepConfig(e_list=(1, 4), n_list=(4, 8), sim_rounds=4,
-                          workloads=("alexnet", "vgg16", "resnet50"))
+                          workloads=("alexnet", "vgg16", "resnet50"),
+                          mapper_space="quick")
 
 
 def _imp_row(imp: Improvement, **extra) -> dict:
@@ -121,9 +128,63 @@ def run_mesh_scaling(sweep: SweepConfig = DEFAULT_SWEEP) -> dict:
             "sim_rounds": sweep.sim_rounds, "rows": rows}
 
 
+def run_mapper(sweep: SweepConfig = DEFAULT_SWEEP) -> dict:
+    """Mapper section: paper-fixed vs auto-searched mapping, per workload.
+
+    For every CNN in ``sweep.workloads`` (FC layers included) and every
+    transformer config in ``sweep.mapper_transformers`` (one decoder block's
+    GEMMs), runs :func:`repro.mapper.search_network` and reports the
+    improvement of the searched :class:`~repro.mapper.NetworkSchedule` over
+    the paper's fixed 8x8 WS+INA placement, plus the hardware-level
+    latency/energy Pareto front.  Selection is baseline-dominating, so
+    ``latency_x >= 1`` and ``energy_x >= 1`` by construction (equality when
+    the paper mapping is already optimal).
+    """
+    import dataclasses as _dc
+
+    from repro.core.workloads import mapper_workloads
+    from repro.mapper import MapperConfig, QUICK_MAPPER, search_network
+
+    base = QUICK_MAPPER if sweep.mapper_space == "quick" else MapperConfig()
+    mcfg = _dc.replace(base, sim_rounds=sweep.sim_rounds)
+    workloads = mapper_workloads(conv=sweep.workloads,
+                                 transformers=sweep.mapper_transformers,
+                                 tokens=sweep.mapper_tokens)
+    rows, pareto, schedules = [], {}, {}
+    for name, layers in workloads.items():
+        t0 = time.time()
+        out = search_network(name, layers, mcfg)
+        rows.append({
+            "workload": name,
+            "layers": len(layers),
+            "hardware": "x".join(map(str, out.best.hardware)),
+            "latency_x": out.latency_x,
+            "energy_x": out.energy_x,
+            "paper_latency_cycles": out.baseline.latency_cycles,
+            "auto_latency_cycles": out.best.latency_cycles,
+            "paper_energy_pj": out.baseline.total_energy_pj,
+            "auto_energy_pj": out.best.total_energy_pj,
+            "paper_utilization": out.baseline.pe_utilization,
+            "auto_utilization": out.best.pe_utilization,
+            "search": out.stats,
+            "elapsed_us": (time.time() - t0) * 1e6,
+        })
+        pareto[name] = [{
+            "hardware": "x".join(map(str, s.hardware)),
+            "latency_cycles": s.latency_cycles,
+            "total_energy_pj": s.total_energy_pj,
+            "pe_utilization": s.pe_utilization,
+        } for s in out.pareto]
+        schedules[name] = out.best.to_dict()
+    return {"figure": "mapper", "paper_reference": PAPER_REFERENCE["mapper"],
+            "sim_rounds": sweep.sim_rounds, "space": sweep.mapper_space,
+            "rows": rows, "pareto": pareto, "best_schedules": schedules}
+
+
 _RUNNERS: dict[str, Callable[[SweepConfig], dict]] = {
     "tables": run_tables, "fig7_9": run_fig7_9,
     "fig10_12": run_fig10_12, "mesh_scaling": run_mesh_scaling,
+    "mapper": run_mapper,
 }
 
 
@@ -164,6 +225,16 @@ def fig7_9_csv_lines(sweep: SweepConfig = DEFAULT_SWEEP) -> list[str]:
 
 def fig10_12_csv_lines(sweep: SweepConfig = DEFAULT_SWEEP) -> list[str]:
     return _fig_section_csv("fig10_12", run_fig10_12(sweep))
+
+
+def _mapper_csv(fig: dict) -> list[str]:
+    return [(f"mapper_{r['workload']},{r.get('elapsed_us', 0.0):.0f},"
+             f"latency_x={r['latency_x']:.3f};energy_x={r['energy_x']:.3f};"
+             f"hw={r['hardware']}") for r in fig["rows"]]
+
+
+def mapper_csv_lines(sweep: SweepConfig = DEFAULT_SWEEP) -> list[str]:
+    return _mapper_csv(run_mapper(sweep))
 
 
 # --------------------------------------------------------------------------- #
@@ -215,5 +286,7 @@ def run_all(sweep: SweepConfig = DEFAULT_SWEEP,
         for section in ("fig7_9", "fig10_12"):
             if section in sections:
                 csv += _fig_section_csv(section, results[section])
+        if "mapper" in sections:
+            csv += _mapper_csv(results["mapper"])
         (out / "benchmarks.csv").write_text("\n".join(csv) + "\n")
     return results

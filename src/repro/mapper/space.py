@@ -1,0 +1,214 @@
+"""The mapping search space: what the mapper enumerates, and how it prunes.
+
+A :class:`Mapping` is one way to lay a layer onto the accelerator: a mesh
+shape (rectangular ``width x height`` included), PEs per router, dataflow
+(WS/OS), router collective semantics (INA vs eject->add->inject), weight
+precision, and the chains-per-column count G (the paper always uses the
+maximum ``floor(H/P#)``; smaller G trades bigger gather payloads against
+round count, which is exactly the latency/energy tension the Pareto report
+surfaces).
+
+Hardware axes (``width``/``height``/``e_pes``) are fixed for a whole network
+— a chip does not reconfigure between layers — while the per-layer axes
+(``dataflow``/``semantics``/``groups``/``q_bits``) may vary layer to layer.
+:class:`MapperConfig` bounds the space under a PE budget so searched
+mappings compare fairly against the paper's fixed 8x8x1 placement.
+
+Pruning rules (DESIGN.md S9):
+1. *Feasibility* — WS needs ``g * P# <= height`` per Eq. (2); chains taller
+   than a column fall back to the sequential multi-pass model and only the
+   maximal-G mapping is kept for them.
+2. *Budget* — ``width * height * e_pes`` must land in
+   ``[pe_budget * min_pe_fill, pe_budget]``; aspect ratios beyond
+   ``max_aspect`` are dropped (row streaming degenerates).
+3. *Analytic ranking* — survivors are ranked by the Eq. (1)-(4) round count
+   composed with per-round serialization bounds (:func:`analytic_latency`),
+   and only the ``prune_keep`` best per (layer, hardware) reach the
+   event-driven simulator.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from dataclasses import dataclass
+from typing import Optional
+
+from repro.core.ina_model import DEFAULT_Q_BITS, p_num
+from repro.core.noc import NocConfig
+from repro.core.noc.traffic import layer_plan
+from repro.core.ops import LayerShape
+
+DATAFLOWS = ("ws", "os")
+SEMANTICS = ("ina", "eject_inject")
+
+
+@dataclass(frozen=True)
+class Mapping:
+    """One candidate placement of a layer onto the mesh."""
+
+    width: int = 8
+    height: int = 8
+    e_pes: int = 1
+    dataflow: str = "ws"            # "ws" | "os"
+    semantics: str = "ina"          # "ina" | "eject_inject"
+    q_bits: int = DEFAULT_Q_BITS
+    groups: Optional[int] = None    # chains per column (None = max feasible)
+
+    @property
+    def mode(self) -> str:
+        """The traffic-generator mode this mapping lowers to."""
+        if self.dataflow == "os":
+            return "os_gather"
+        return "ws_ina" if self.semantics == "ina" else "ws_noina"
+
+    @property
+    def num_pes(self) -> int:
+        return self.width * self.height * self.e_pes
+
+    @property
+    def hardware(self) -> tuple[int, int, int]:
+        return (self.width, self.height, self.e_pes)
+
+    @property
+    def sort_key(self) -> tuple:
+        """Total deterministic order (``groups=None`` sorts first)."""
+        return (self.width, self.height, self.e_pes, self.dataflow,
+                self.semantics, self.q_bits,
+                -1 if self.groups is None else self.groups)
+
+    def cfg(self, base: NocConfig = NocConfig()) -> NocConfig:
+        """The NocConfig this mapping simulates under (keyed by the cache)."""
+        rows = None if self.height == self.width else self.height
+        return dataclasses.replace(base, n=self.width, rows=rows)
+
+    def label(self) -> str:
+        g = "max" if self.groups is None else str(self.groups)
+        return (f"{self.width}x{self.height}xE{self.e_pes}:{self.dataflow}/"
+                f"{self.semantics}/q{self.q_bits}/g{g}")
+
+
+#: The paper's fixed placement: 8x8 square, 1 PE/router, WS + INA, q=32,
+#: maximal chains per column (Eqs. 1-4 / Fig. 3).
+PAPER_MAPPING = Mapping()
+
+
+@dataclass(frozen=True)
+class MapperConfig:
+    """Bounds of the search space (defaults sized to the paper's 64 PEs)."""
+
+    pe_budget: int = 64             # width * height * e_pes ceiling
+    min_pe_fill: float = 0.5        # floor, as a fraction of the budget
+    max_aspect: int = 4             # max width/height (and height/width)
+    min_dim: int = 2                # smallest mesh side considered
+    e_list: tuple[int, ...] = (1, 2, 4)
+    q_list: tuple[int, ...] = (DEFAULT_Q_BITS,)
+    dataflows: tuple[str, ...] = DATAFLOWS
+    semantics: tuple[str, ...] = SEMANTICS
+    group_options: int = 3          # distinct G values tried per (layer, hw)
+    prune_keep: int = 6             # survivors simulated per (layer, hw)
+    sim_rounds: int = 16            # simulated window length (PR-2 default)
+
+
+#: CI smoke shape: square + one rectangle, two E points, short windows.
+QUICK_MAPPER = MapperConfig(e_list=(1, 2), min_dim=4, group_options=2,
+                            prune_keep=4, sim_rounds=4)
+
+
+def hardware_candidates(mcfg: MapperConfig) -> list[tuple[int, int, int]]:
+    """All (width, height, e_pes) triples inside the budget (deterministic).
+
+    Dimensions run over powers of two (meshes and Eq. (3) divisions stay
+    integral); the budget floor keeps the comparison against the paper's
+    fully-populated mesh fair.
+    """
+    dims = []
+    d = mcfg.min_dim
+    while d * mcfg.min_dim <= mcfg.pe_budget:
+        dims.append(d)
+        d *= 2
+    out = []
+    lo = mcfg.pe_budget * mcfg.min_pe_fill
+    for w in dims:
+        for h in dims:
+            if max(w, h) > mcfg.max_aspect * min(w, h):
+                continue
+            for e in mcfg.e_list:
+                if lo <= w * h * e <= mcfg.pe_budget:
+                    out.append((w, h, e))
+    return sorted(out)
+
+
+def group_choices(p_req: int, height: int, k: int) -> list[Optional[int]]:
+    """Up to ``k`` chains-per-column values: max feasible, then halvings.
+
+    ``None`` (= the paper's maximal G) always leads; ``G=1`` closes the list
+    when it fits.  Chains taller than the column (``p_req > height``) leave
+    only the sequential multi-pass mapping (pruning rule 1).
+    """
+    g_max = height // min(p_req, height)
+    if p_req > height or g_max <= 1:
+        return [None]
+    out: list[Optional[int]] = [None]
+    g = g_max // 2
+    while g > 1 and len(out) < k - 1:
+        out.append(g)
+        g //= 2
+    if len(out) < k:
+        out.append(1)
+    return out
+
+
+def layer_candidates(layer: LayerShape, hardware: tuple[int, int, int],
+                     mcfg: MapperConfig) -> list[Mapping]:
+    """Enumerate the per-layer mappings for one hardware point (sorted)."""
+    w, h, e = hardware
+    out = []
+    for q in mcfg.q_list:
+        if "os" in mcfg.dataflows and "ina" in mcfg.semantics:
+            # OS keeps psums local; the gather collective is the only NoC
+            # flow and it needs gather-capable routers — OS under plain
+            # eject/inject routers is not modeled (paper SIV.B compares
+            # OS-with-gather only), so OS contributes one candidate per q
+            # and none at all when the space excludes capable routers.
+            out.append(Mapping(w, h, e, "os", "ina", q, None))
+        if "ws" not in mcfg.dataflows:
+            continue
+        p_req = p_num(layer, q_bits=q)
+        for sem in mcfg.semantics:
+            for g in group_choices(p_req, h, mcfg.group_options):
+                out.append(Mapping(w, h, e, "ws", sem, q, g))
+    return sorted(set(out), key=lambda m: m.sort_key)
+
+
+def analytic_latency(layer: LayerShape, mapping: Mapping,
+                     base_cfg: NocConfig = NocConfig()) -> float:
+    """Cheap cycle estimate used for pruning (no event-driven simulation).
+
+    Composes the Eq. (1)-(4) round count (via :func:`layer_plan`, the same
+    arithmetic) with per-round serialization bounds: the column gather
+    occupies its ejection port for ``gather_flits`` cycles per round, a
+    Fig. 4(a) relay chain adds its eject->add->inject pipeline, and weight
+    fills bar execution.  Not exact — contention is what the simulator is
+    for — but monotone enough to rank candidates (DESIGN.md S9).
+    """
+    cfg = mapping.cfg(base_cfg)
+    plan = layer_plan(layer, cfg, mapping.e_pes, mapping.mode,
+                      mapping.q_bits, mapping.groups)
+    hop = cfg.router_cycles + cfg.link_cycles
+    per_round = float(plan.gather_flits)
+    if mapping.mode == "ws_noina" and plan.p > 1:
+        per_round += (plan.p - 1) * (hop + 2 * cfg.ni_cycles
+                                     + plan.unicast_flits
+                                     + cfg.pe_add_cycles)
+    depth = (cfg.height - 1) * hop + 2 * cfg.ni_cycles
+    fill = plan.fills * (cfg.width // cfg.stream_buses_per_row) \
+        * cfg.payload_flits(plan.weight_bits_per_router)
+    stream = plan.weight_bits / (plan.p * cfg.ws_input_reuse * cfg.flit_bits
+                                 * cfg.stream_buses_per_row)
+    if mapping.dataflow == "os":
+        # OS re-streams weights continuously (no stationarity): its
+        # per-round pacing is the weight re-stream plus input streaming,
+        # mirroring _os_weight_stream_round in the exact simulator.
+        stream += plan.weight_bits / (cfg.flit_bits * cfg.os_weight_reuse
+                                      * cfg.os_stream_bw)
+    return fill + depth + plan.rounds * max(per_round, stream)

@@ -1,4 +1,6 @@
 """Exact reproduction of the paper's Tables I & II (INA analytical model)."""
+import math
+
 import pytest
 
 from repro.core.ina_model import (ConvLayer, ina_rounds, ina_table, needs_ina,
@@ -96,6 +98,27 @@ def test_total_ina_rounds_forwards_q_bits():
     assert 0 < total_ina_rounds(VGG16, 8, q_bits=8) < total_ina_rounds(VGG16, 8)
     # Default q matches the explicit 32-bit call (consistency with ina_rounds).
     assert total_ina_rounds(VGG16, 8) == total_ina_rounds(VGG16, 8, q_bits=32)
+
+
+def test_multi_row_chain_rounds_not_clamped():
+    """Regression: P# > N must not silently clamp to one group per column.
+
+    A filter whose chain is taller than the mesh accumulates in ceil(P#/N)
+    sequential passes; the old ``groups = 1`` fallback ignored the extra
+    passes and undercounted rounds by that factor.  The paper's tables never
+    hit this case — the mapper's search space (GEMM reductions on short
+    columns) does.
+    """
+    big = ConvLayer("big", R=1, C=6 * 1024, F=16, O=4)
+    assert p_num(big) == 6
+    clamped = math.ceil((big.F / 4) * big.O * big.O)   # the old one-group model
+    assert ina_rounds(big, n=4) == 2 * clamped          # ceil(6/4) = 2 passes
+    assert ina_rounds(big, n=4) > clamped
+    # One-pass meshes are untouched (N=8 holds the whole chain: groups=1).
+    assert ina_rounds(big, n=8) == math.ceil((big.F / 8) * big.O * big.O)
+    # E PEs per router still divide the filter term inside each pass.
+    assert ina_rounds(big, n=4, e_pes_per_router=2) == \
+        2 * math.ceil((big.F / 8) * big.O * big.O)
 
 
 def test_table_shape():
