@@ -1,15 +1,101 @@
 """Mapper search: paper-fixed vs auto-searched mapping ratios.
 
-Thin wrapper over :func:`repro.experiments.sweeps.mapper_csv_lines` (quick
-search space, short windows) kept for the ``benchmarks/run.py`` CSV
-contract; use ``python -m repro.experiments --section mapper`` for the full
-Pareto artifact.
+``run()`` stays the thin ``benchmarks/run.py`` CSV wrapper over
+:func:`repro.experiments.sweeps.mapper_csv_lines`; ``run_full_perf()`` is
+the PR-4 perf-trajectory probe: it times the **full** (non-quick) mapper
+space — AlexNet + VGG-16 + ResNet-50 + both transformer GEMM sets — under
+three execution modes and cross-checks that every ratio is bit-identical:
+
+* ``reference``  — the legacy serial path (heap engine, no compiled
+  windows, no layer memo, cold cache): the PR-3 execution model;
+* ``cold``       — compiled windows + layer memo, empty caches;
+* ``warm``       — same, caches warm (what a persistent-store run sees).
+
+Use ``python -m repro.experiments --section mapper`` for the full Pareto
+artifact.
 """
-from repro.experiments.sweeps import QUICK_SWEEP, mapper_csv_lines
+import dataclasses
+import time
+
+from repro.experiments.sweeps import (DEFAULT_SWEEP, QUICK_SWEEP,
+                                      mapper_csv_lines)
 
 
-def run() -> list[str]:
-    return mapper_csv_lines(QUICK_SWEEP)
+def run(jobs: int = 1, quick: bool = True) -> list[str]:
+    base = QUICK_SWEEP if quick else DEFAULT_SWEEP
+    return mapper_csv_lines(dataclasses.replace(base, jobs=jobs))
+
+
+def run_full_perf(jobs: int = 1) -> tuple[list[str], dict]:
+    """Time the full-space search; returns (csv lines, perf dict).
+
+    "Cold" means cold: the recorded program/plan/route memos are cleared
+    before the reference and cold phases, so earlier sections (or prior
+    runs in this process) cannot subsidize the measurement.
+    """
+    from repro.core.noc.compiled import compiled_disabled
+    from repro.core.noc.simcache import fresh_sim_cache
+    from repro.core.noc.traffic import clear_compiled_caches
+    from repro.experiments.sweeps import run_mapper
+
+    sweep = dataclasses.replace(DEFAULT_SWEEP, jobs=jobs)
+    serial = DEFAULT_SWEEP                      # jobs=1
+
+    with fresh_sim_cache(), compiled_disabled():
+        clear_compiled_caches()
+        t0 = time.time()
+        ref_out = run_mapper(serial)
+        reference_s = time.time() - t0
+    with fresh_sim_cache():
+        clear_compiled_caches()
+        t0 = time.time()
+        cold_out = run_mapper(sweep)
+        cold_s = time.time() - t0
+        t0 = time.time()
+        warm_out = run_mapper(sweep)
+        warm_s = time.time() - t0
+        if jobs == 1:                           # identical config: reuse
+            warm_serial_out, warm_serial_s = warm_out, warm_s
+        else:
+            t0 = time.time()
+            warm_serial_out = run_mapper(serial)
+            warm_serial_s = time.time() - t0
+
+    def sig(out):
+        return [(r["workload"], r["latency_x"], r["energy_x"], r["hardware"])
+                for r in out["rows"]]
+
+    identical = sig(ref_out) == sig(cold_out) == sig(warm_out) \
+        == sig(warm_serial_out)
+    if not identical:                            # must never ship silently
+        raise AssertionError(
+            "mapper ratios differ across execution modes: "
+            f"ref={sig(ref_out)} cold={sig(cold_out)} warm={sig(warm_out)}")
+    perf = {
+        "space": "full",
+        "jobs": jobs,
+        "workloads": [r["workload"] for r in ref_out["rows"]],
+        "reference_serial_s": reference_s,
+        "optimized_cold_s": cold_s,
+        "optimized_warm_s": warm_s,
+        "optimized_warm_serial_s": warm_serial_s,
+        "speedup_cold": reference_s / cold_s,
+        "speedup_warm": reference_s / warm_s,
+        "speedup_warm_serial": reference_s / warm_serial_s,
+        "bit_identical": identical,
+        "pinned_ratios": {r["workload"]: r["latency_x"]
+                          for r in ref_out["rows"]},
+    }
+    lines = [
+        f"mapper_full_reference,{reference_s * 1e6:.0f},engine=heap;jobs=1;cache=cold",
+        f"mapper_full_cold,{cold_s * 1e6:.0f},engine=compiled;jobs={jobs};cache=cold",
+        f"mapper_full_warm,{warm_s * 1e6:.0f},engine=compiled;jobs={jobs};cache=warm",
+        f"mapper_full_warm_serial,{warm_serial_s * 1e6:.0f},engine=compiled;jobs=1;cache=warm",
+        (f"mapper_full_speedup,0,cold={perf['speedup_cold']:.2f}x;"
+         f"warm={perf['speedup_warm_serial']:.2f}x;"
+         f"bit_identical={identical}"),
+    ]
+    return lines, perf
 
 
 if __name__ == "__main__":

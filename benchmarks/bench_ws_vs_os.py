@@ -5,11 +5,15 @@ the ``benchmarks/run.py`` CSV contract.
 """
 import dataclasses
 
-from repro.experiments.sweeps import DEFAULT_SWEEP, fig10_12_csv_lines
+from repro.experiments.sweeps import (DEFAULT_SWEEP, QUICK_SWEEP,
+                                      fig10_12_csv_lines)
 
 
-def run(sim_rounds: int = 16) -> list[str]:
-    sweep = dataclasses.replace(DEFAULT_SWEEP, sim_rounds=sim_rounds)
+def run(sim_rounds: int = 16, jobs: int = 1, quick: bool = False) -> list[str]:
+    base = QUICK_SWEEP if quick else DEFAULT_SWEEP
+    sweep = dataclasses.replace(
+        base, jobs=jobs,
+        **({} if quick else {"sim_rounds": sim_rounds}))
     return fig10_12_csv_lines(sweep)
 
 

@@ -8,12 +8,17 @@ stalls are folded into link occupancy), the paper's 4-cycle router / 1-cycle
 link / 128-bit flit configuration (Table III), and an event-count energy model
 with Orion-style per-component energies.
 """
-from .router import NocConfig
-from .simcache import SIM_CACHE, SimCache, sim_cache_disabled
+from .compiled import CompiledProgram, compile_program, compiled_disabled
+from .router import EnergyLedger, NocConfig
+from .simcache import (SIM_CACHE, SimCache, fresh_sim_cache,
+                       sim_cache_disabled)
 from .topology import Mesh, route, xy_route, yx_route
 from .simulator import NocSim
-from .traffic import LayerResult, layer_plan, simulate_layer, simulate_network
+from .traffic import (CompiledWindow, LayerResult, layer_plan,
+                      simulate_layer, simulate_network)
 
-__all__ = ["NocConfig", "Mesh", "route", "xy_route", "yx_route", "NocSim",
-           "LayerResult", "layer_plan", "simulate_layer", "simulate_network",
-           "SIM_CACHE", "SimCache", "sim_cache_disabled"]
+__all__ = ["NocConfig", "EnergyLedger", "Mesh", "route", "xy_route",
+           "yx_route", "NocSim", "LayerResult", "layer_plan",
+           "simulate_layer", "simulate_network", "SIM_CACHE", "SimCache",
+           "sim_cache_disabled", "fresh_sim_cache", "CompiledProgram",
+           "CompiledWindow", "compile_program", "compiled_disabled"]

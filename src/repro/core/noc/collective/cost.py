@@ -15,7 +15,7 @@ from dataclasses import dataclass
 from functools import lru_cache
 from typing import Iterable, Optional
 
-from ..router import NocConfig
+from ..router import EnergyLedger, NocConfig
 from .engine import run_program
 from .schedule import plan_collective
 from .trees import full_mesh, mesh_row
@@ -44,6 +44,11 @@ class CollectiveCost:
     latency_cycles: int
     energy_pj: float
     packets: int
+    #: Per-event breakdown (a private copy).  Excluded from eq/hash: the
+    #: ledger is mutable and fully determined by the other fields, and
+    #: CollectiveCost instances must stay hashable (set/dict-key use).
+    ledger: Optional[EnergyLedger] = dataclasses.field(default=None,
+                                                       compare=False)
 
     @property
     def power_pj_per_cycle(self) -> float:
@@ -53,13 +58,16 @@ class CollectiveCost:
 @lru_cache(maxsize=4096)
 def _simulate(op: str, parts: tuple[Coord, ...], payload_bits: float,
               cfg: NocConfig, root: Optional[Coord], algorithm: str,
-              semantics: str, order: str) -> tuple[int, float, int]:
+              semantics: str, order: str,
+              ) -> tuple[int, float, int, EnergyLedger]:
     prog = plan_collective(op, parts, payload_bits, cfg, root=root,
                            algorithm=algorithm, semantics=semantics,
                            order=order)
     res = run_program(prog, cfg)
+    # Keep a private EnergyLedger.copy(): the cached tuple must never alias
+    # a ledger a caller can mutate.
     return (res.latency_cycles, res.network_energy_pj(cfg),
-            sum(1 for o in prog if o.flits))
+            sum(1 for o in prog if o.flits), res.ledger.copy())
 
 
 def collective_cost(op: str, payload_bits: float,
@@ -74,13 +82,14 @@ def collective_cost(op: str, payload_bits: float,
     """
     parts = tuple(sorted(participants)) if participants is not None \
         else tuple(full_mesh(cfg.n))
-    lat, energy, packets = _simulate(op, parts, float(payload_bits), cfg,
-                                     root, algorithm, semantics, order)
+    lat, energy, packets, ledger = _simulate(op, parts, float(payload_bits),
+                                             cfg, root, algorithm, semantics,
+                                             order)
     return CollectiveCost(op=op, algorithm=algorithm, semantics=semantics,
                           n=cfg.n, participants=len(parts),
                           payload_bits=float(payload_bits),
                           latency_cycles=lat, energy_pj=energy,
-                          packets=packets)
+                          packets=packets, ledger=ledger.copy())
 
 
 # --------------------------------------------------------------------------- #

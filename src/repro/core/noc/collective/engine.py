@@ -10,12 +10,21 @@ traffic generator cycle-for-cycle.
 
 Virtual ops (``flits == 0``, no inject/eject) are synchronisation points:
 they complete at their issue time without touching the network.
+
+Two executors share these semantics (DESIGN.md S10): the closure-based
+heap engine below (the ground truth, fully general), and the compiled
+flat-array replay of :mod:`repro.core.noc.compiled`.  ``run_program``
+dispatches to the compiled executor when the program is encodable and no
+external simulator was supplied; results are bit-identical (latency and
+ledger), enforced by ``tests/test_perf_layer.py``.
 """
 from __future__ import annotations
 
 from dataclasses import dataclass
 from typing import Optional, Sequence
 
+from ..compiled import (UncompilableProgram, compile_program,
+                        compiled_enabled)
 from ..router import EnergyLedger, NocConfig
 from ..simulator import NocSim
 from .schedule import PacketOp
@@ -37,9 +46,26 @@ class ProgramResult:
 
 
 def run_program(prog: Sequence[PacketOp], cfg: Optional[NocConfig] = None,
-                *, sim: Optional[NocSim] = None, t0: int = 0) -> ProgramResult:
+                *, sim: Optional[NocSim] = None, t0: int = 0,
+                engine: str = "auto") -> ProgramResult:
     """Execute ``prog`` on ``sim`` (or a fresh simulator) and return the
-    makespan, per-op completion times, and the energy ledger."""
+    makespan, per-op completion times, and the energy ledger.
+
+    ``engine`` selects the executor: ``"auto"`` replays through the
+    compiled flat-array path when possible (bit-identical, no per-op
+    closures), ``"heap"`` forces the ground-truth engine below.  A caller
+    supplied ``sim`` always uses the heap engine (the caller owns the
+    simulator's ledger and resource state).
+    """
+    if sim is None and engine == "auto" and compiled_enabled():
+        try:
+            cp = compile_program(prog, cfg if cfg is not None else NocConfig())
+        except UncompilableProgram:
+            cp = None
+        if cp is not None:
+            latency, ledger, done, delivered = cp.run(t0)
+            return ProgramResult(latency_cycles=latency, ledger=ledger,
+                                 done=done, delivered=delivered)
     if sim is None:
         sim = NocSim(cfg if cfg is not None else NocConfig())
     n = len(prog)

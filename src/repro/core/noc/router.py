@@ -103,6 +103,25 @@ class NocConfig:
         return 1 + self.payload_flits(results * self.gather_payload_bits)
 
 
+def cached_field_hash(self):
+    """Hash of the field tuple, computed once per instance.
+
+    ``NocConfig`` is a member of every window-cache key, so the generated
+    dataclass ``__hash__`` (re-hashing 20+ fields per lookup) showed up in
+    sweep profiles.  The cache lives outside the field set: invisible to
+    ``repr``/``asdict``/``replace``/``__eq__``, and consistent within a
+    process family (fork workers inherit the parent's hash seed).
+    """
+    h = self.__dict__.get("_hash_cache")
+    if h is None:
+        h = hash(tuple(self.__dict__[f] for f in self.__dataclass_fields__))
+        object.__setattr__(self, "_hash_cache", h)
+    return h
+
+
+NocConfig.__hash__ = cached_field_hash
+
+
 @dataclass
 class EnergyLedger:
     """Event-count energy accumulator (the Orion model is event-based)."""
@@ -136,6 +155,18 @@ class EnergyLedger:
     def add(self, other: "EnergyLedger") -> None:
         for f in self.__dataclass_fields__:
             setattr(self, f, getattr(self, f) + getattr(other, f))
+
+    def copy(self) -> "EnergyLedger":
+        """Cheap exact copy (the hot-path alternative to ``scaled(1.0)``)."""
+        return EnergyLedger(**self.__dict__)
+
+    def as_tuple(self) -> tuple:
+        """Field values in declaration order (persistent-cache payload)."""
+        return tuple(self.__dict__[f] for f in self.__dataclass_fields__)
+
+    @classmethod
+    def from_tuple(cls, values) -> "EnergyLedger":
+        return cls(**dict(zip(cls.__dataclass_fields__, values)))
 
     def scaled(self, k: float) -> "EnergyLedger":
         out = EnergyLedger()

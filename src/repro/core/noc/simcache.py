@@ -18,20 +18,59 @@ change hashes to a different entry — there is nothing to flush when a sweep
 varies ``n``, ``e_pes`` or energy constants.
 
 Entries store ``(latency, EnergyLedger)``.  Ledgers are mutable event-count
-accumulators, so the cache keeps a private copy and hands out a fresh copy
-per hit (``EnergyLedger.scaled(1.0)`` — exact for floats), keeping cached
-runs bit-identical to uncached ones (see ``tests/test_experiments.py``).
+accumulators, so the cache keeps a private copy and hands out a fresh
+:meth:`EnergyLedger.copy` per hit, keeping cached runs bit-identical to
+uncached ones (see ``tests/test_experiments.py``).
+
+Persistence (DESIGN.md S10): :meth:`SimCache.persist` attaches a versioned
+on-disk store (``window_cache.json`` under ``results/.simcache/`` by
+default) so repeated benchmark, sweep, and CI runs start warm across
+processes.  Keys are serialized as ``repr()`` of the live key — the frozen
+``NocConfig`` is part of the key, so a config-field change re-keys every
+entry — and the file carries a schema hash over the key layout plus the
+``NocConfig``/``EnergyLedger`` field lists: any schema drift makes the
+whole file invisible (cold start) instead of serving stale rows.  Saves
+re-read the file and merge before an atomic replace, so concurrent
+processes union their entries instead of clobbering each other.
 """
 from __future__ import annotations
 
+import atexit
+import hashlib
+import json
+import os
+import tempfile
 from contextlib import contextmanager
+from pathlib import Path
 from typing import Hashable, Optional
 
-from .router import EnergyLedger
+try:
+    import fcntl
+except ImportError:                              # non-POSIX: no inter-process
+    fcntl = None                                 # lock; saves may interleave
+
+from .router import EnergyLedger, NocConfig
 
 #: Cache key of one simulated window: (cfg, mode, window, g, p,
 #: gather_flits, unicast_flits, e_pes).
 WindowKey = Hashable
+
+#: Bump when the window-key layout or the stored payload shape changes.
+SCHEMA_VERSION = 1
+
+#: Environment override for the persistent store location (see
+#: EXPERIMENTS.md); CLI ``--cache-dir`` flags take precedence.
+CACHE_DIR_ENV = "REPRO_SIMCACHE_DIR"
+
+_CACHE_FILE = "window_cache.json"
+
+
+def schema_hash() -> str:
+    """Hash of everything the serialized entries structurally depend on."""
+    parts = (SCHEMA_VERSION,
+             tuple(NocConfig.__dataclass_fields__),
+             tuple(EnergyLedger.__dataclass_fields__))
+    return hashlib.sha1(repr(parts).encode()).hexdigest()[:16]
 
 
 class SimCache:
@@ -41,33 +80,176 @@ class SimCache:
         self.enabled = enabled
         self.hits = 0
         self.misses = 0
+        self.disk_hits = 0
+        #: Incremented on :meth:`clear`; dependent side-caches (e.g. the
+        #: mapper's layer-result memo) key off it to invalidate themselves.
+        self.generation = 0
         self._store: dict[WindowKey, tuple[float, EnergyLedger]] = {}
+        self._disk: dict[str, tuple] = {}        # key repr -> [lat, fields]
+        self._persist_dir: Optional[Path] = None
+        self._persist_pid: Optional[int] = None
+        self._saved_size: Optional[int] = None   # len(_store) at last save
 
     def get(self, key: WindowKey) -> Optional[tuple[float, EnergyLedger]]:
         if not self.enabled:
             return None
         hit = self._store.get(key)
+        if hit is None and self._disk:
+            row = self._disk.pop(repr(key), None)
+            if row is not None:                  # promote disk row to memory
+                hit = (float(row[0]), EnergyLedger.from_tuple(row[1]))
+                self._store[key] = hit
+                self.disk_hits += 1
         if hit is None:
             self.misses += 1
             return None
         self.hits += 1
         t, ledger = hit
-        return t, ledger.scaled(1.0)
+        return t, ledger.copy()
 
     def put(self, key: WindowKey, latency: float, ledger: EnergyLedger) -> None:
         if self.enabled:
-            self._store[key] = (latency, ledger.scaled(1.0))
+            self._store[key] = (latency, ledger.copy())
+
+    def merge(self, entries: dict[WindowKey, tuple[float, EnergyLedger]],
+              ) -> int:
+        """Adopt entries computed elsewhere (a pool worker's delta).
+
+        Deterministic regardless of arrival order: keys are pure functions
+        of the plan shape, so duplicate keys carry identical values.
+        Returns the number of new keys.
+        """
+        new = 0
+        for key, (latency, ledger) in entries.items():
+            if key not in self._store:
+                self._store[key] = (latency, ledger.copy())
+                new += 1
+        return new
+
+    def export(self, keys=None) -> dict[WindowKey, tuple[float, EnergyLedger]]:
+        """Snapshot entries (all, or the given keys) for cross-process merge."""
+        src = self._store if keys is None else {
+            k: self._store[k] for k in keys if k in self._store}
+        return {k: (t, led.copy()) for k, (t, led) in src.items()}
 
     def clear(self) -> None:
-        self.hits = self.misses = 0
+        self.hits = self.misses = self.disk_hits = 0
+        self.generation += 1
         self._store.clear()
+        self._disk.clear()
 
     def __len__(self) -> int:
         return len(self._store)
 
+    def __contains__(self, key: WindowKey) -> bool:
+        return key in self._store
+
     def stats(self) -> dict:
+        looked = self.hits + self.misses
         return {"enabled": self.enabled, "entries": len(self._store),
-                "hits": self.hits, "misses": self.misses}
+                "hits": self.hits, "misses": self.misses,
+                "hit_rate": self.hits / looked if looked else 0.0,
+                "disk_hits": self.disk_hits,
+                "persist_dir": str(self._persist_dir)
+                if self._persist_dir else None}
+
+    # ------------------------------------------------------------------ #
+    # Persistent store
+    # ------------------------------------------------------------------ #
+    def load(self, dir_path: str | Path) -> int:
+        """Read the on-disk store; returns the number of rows made visible.
+
+        A missing/corrupt file or a schema-hash mismatch loads nothing
+        (cold start) — never an error.
+        """
+        path = Path(dir_path) / _CACHE_FILE
+        try:
+            doc = json.loads(path.read_text())
+        except (OSError, ValueError):
+            return 0
+        if doc.get("schema") != schema_hash():
+            return 0
+        self._disk.update(doc.get("entries", {}))
+        return len(doc.get("entries", {}))
+
+    def save(self, dir_path: Optional[str | Path] = None) -> int:
+        """Atomically merge in-memory entries into the on-disk store.
+
+        The read-merge-replace sequence runs under an exclusive advisory
+        file lock (``.lock`` beside the store, where ``fcntl`` exists), so
+        concurrent savers serialize and genuinely union their entries;
+        the write itself is tempfile + ``os.replace`` so readers never
+        observe a torn file.  Returns the number of rows written.
+        """
+        target = Path(dir_path) if dir_path is not None else self._persist_dir
+        if target is None:
+            return 0
+        target.mkdir(parents=True, exist_ok=True)
+        if fcntl is None:                        # pragma: no cover
+            return self._merge_and_replace(target)
+        with open(target / (_CACHE_FILE + ".lock"), "w") as lock:
+            fcntl.flock(lock, fcntl.LOCK_EX)
+            try:
+                return self._merge_and_replace(target)
+            finally:
+                fcntl.flock(lock, fcntl.LOCK_UN)
+
+    def _merge_and_replace(self, target: Path) -> int:
+        path = target / _CACHE_FILE
+        entries: dict[str, tuple] = {}
+        try:
+            doc = json.loads(path.read_text())
+            if doc.get("schema") == schema_hash():
+                entries.update(doc.get("entries", {}))
+        except (OSError, ValueError):
+            pass
+        entries.update(self._disk)               # unpromoted loaded rows
+        for key, (latency, ledger) in self._store.items():
+            entries[repr(key)] = (latency, ledger.as_tuple())
+        payload = json.dumps({"schema": schema_hash(), "entries": entries})
+        fd, tmp = tempfile.mkstemp(dir=target, prefix=".window_cache-")
+        try:
+            with os.fdopen(fd, "w") as fh:
+                fh.write(payload)
+            os.replace(tmp, path)
+        except BaseException:
+            try:
+                os.unlink(tmp)
+            except OSError:
+                pass
+            raise
+        if target == self._persist_dir:
+            self._saved_size = len(self._store)
+        return len(entries)
+
+    def persist(self, dir_path: str | Path) -> int:
+        """Load-on-start + merge-on-exit against ``dir_path``.
+
+        Registers a single atexit save guarded by PID, so forked pool
+        workers (which exit via ``os._exit``) never write, and re-calls
+        just retarget the directory.  Returns rows loaded.
+        """
+        self._persist_dir = Path(dir_path)
+        loaded = self.load(self._persist_dir)
+        if self._persist_pid is None:
+            self._persist_pid = os.getpid()
+            atexit.register(self._save_at_exit)
+        return loaded
+
+    def _save_at_exit(self) -> None:
+        if self._persist_dir is None or os.getpid() != self._persist_pid:
+            return
+        if self._saved_size == len(self._store):
+            return                               # nothing new since last save
+        try:
+            self.save()
+        except OSError:
+            pass                                 # best effort on teardown
+
+    def persist_default_dir(self) -> str:
+        """The store location honoring the environment override."""
+        return os.environ.get(CACHE_DIR_ENV, os.path.join(
+            "results", ".simcache"))
 
 
 #: Process-wide cache consulted by ``_sim_rounds_window``.
@@ -90,3 +272,23 @@ def sim_cache_disabled():
         yield
     finally:
         SIM_CACHE.enabled = prev
+
+
+@contextmanager
+def fresh_sim_cache():
+    """Swap in an empty, non-persistent cache state (reference timings).
+
+    Restores the previous store, counters, and persistence wiring on exit —
+    the surrounding process keeps its warm cache.
+    """
+    saved = (SIM_CACHE.hits, SIM_CACHE.misses, SIM_CACHE.disk_hits,
+             SIM_CACHE._store, SIM_CACHE._disk, SIM_CACHE._persist_dir)
+    SIM_CACHE.hits = SIM_CACHE.misses = SIM_CACHE.disk_hits = 0
+    SIM_CACHE._store, SIM_CACHE._disk, SIM_CACHE._persist_dir = {}, {}, None
+    SIM_CACHE.generation += 1
+    try:
+        yield SIM_CACHE
+    finally:
+        (SIM_CACHE.hits, SIM_CACHE.misses, SIM_CACHE.disk_hits,
+         SIM_CACHE._store, SIM_CACHE._disk, SIM_CACHE._persist_dir) = saved
+        SIM_CACHE.generation += 1

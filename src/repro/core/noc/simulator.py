@@ -15,34 +15,140 @@ Energy is counted per event into an :class:`EnergyLedger` (Orion-style):
 router traversals (buffer write/read + crossbar) per flit per router
 (links + 1 routers per path), links per flit per link, NI crossings per flit,
 and packet (dis)assembly per endpoint.
+
+Resource state is held in int-indexed flat arrays sized from the
+:class:`NocConfig` mesh (4 directed links per node, ``2 * vcs`` ports per
+node) rather than tuple-keyed dicts, and per-packet routes/link ids are
+memoized per ``(width, height, src, dst)`` — ``enqueue`` no longer derives
+a route or allocates per packet (DESIGN.md S10).  Coordinates outside the
+configured mesh (or non-unit path steps) transparently fall back to a
+keyed overflow dict, preserving the pre-PR-4 "any coordinate" semantics.
 """
 from __future__ import annotations
 
 import heapq
 import itertools
-from dataclasses import dataclass, field
 from typing import Callable, Optional
 
 from .router import EnergyLedger, NocConfig
-from .topology import links_of, xy_route
+from .topology import route_links
 
 Coord = tuple[int, int]
 
+#: Direction codes for the 4 outgoing links of a node (E, W, S, N).
+_DIRS = {(1, 0): 0, (-1, 0): 1, (0, 1): 2, (0, -1): 3}
 
-@dataclass
+#: (width, height, src, dst) / (width, height, path) -> (link_ids, links);
+#: ``link_ids`` is None when any hop is not an in-mesh unit step.
+_LINK_ID_CACHE: dict = {}
+
+
+def encode_links_mixed(links, width: int, height: int) -> tuple:
+    """Per-link encoding: the flat int id for in-mesh unit steps, the raw
+    coord-pair key for anything else.  Encoding per *link* (not per
+    packet) keeps contention exact when exotic and in-mesh packets share
+    a physical link — the same link always resolves to the same resource
+    slot, whichever packet traverses it."""
+    out = []
+    for link in links:
+        (ax, ay), (bx, by) = link
+        d = _DIRS.get((bx - ax, by - ay))
+        if d is None or not (0 <= ax < width and 0 <= ay < height
+                             and 0 <= bx < width and 0 <= by < height):
+            out.append(link)
+        else:
+            out.append((ay * width + ax) * 4 + d)
+    return tuple(out)
+
+
+def encode_links(links, width: int, height: int) -> Optional[tuple[int, ...]]:
+    """All-flat int ids for directed links; None if any link is exotic
+    (the strict form the compiled engine requires)."""
+    mixed = encode_links_mixed(links, width, height)
+    return mixed if all(type(x) is int for x in mixed) else None
+
+
+def route_link_ids(width: int, height: int, src: Coord, dst: Coord):
+    """Memoized ``(strict_ids, mixed_ids, links)`` of the XY route on a
+    W x H mesh.  ``strict_ids`` is None when any hop is unencodable (the
+    compiled engine falls back to heap); ``mixed_ids`` always resolves,
+    per link, to either a flat index or an overflow key."""
+    key = (width, height, src, dst)
+    hit = _LINK_ID_CACHE.get(key)
+    if hit is None:
+        hit = _encode_entry(route_links(src, dst), width, height)
+        _LINK_ID_CACHE[key] = hit
+    return hit
+
+
+def path_link_ids(width: int, height: int, path: tuple[Coord, ...]):
+    """Memoized ``(strict_ids, mixed_ids, links)`` of a path override."""
+    key = (width, height, path)
+    hit = _LINK_ID_CACHE.get(key)
+    if hit is None:
+        hit = _encode_entry(tuple(zip(path[:-1], path[1:])), width, height)
+        _LINK_ID_CACHE[key] = hit
+    return hit
+
+
+def _encode_entry(links, width: int, height: int) -> tuple:
+    mixed = encode_links_mixed(links, width, height)
+    strict = mixed if all(type(x) is int for x in mixed) else None
+    return (strict, mixed, links)
+
+
+def port_index(kind: int, vc: int, node: Coord, width: int, height: int,
+               vcs: int) -> Optional[int]:
+    """Flat index of an injection (kind 0) / ejection (kind 1) port.
+
+    The single definition both engines share — the compiled executor's
+    bit-identity contract requires the heap simulator and
+    :mod:`repro.core.noc.compiled` to agree on the port/link layout.
+    Returns None when the node/VC falls outside the configured mesh.
+    """
+    x, y = node
+    if 0 <= x < width and 0 <= y < height and 0 <= vc < vcs:
+        return (kind * vcs + vc) * (width * height) + y * width + x
+    return None
+
+
+def effective_vcs(cfg: NocConfig) -> int:
+    """Port-array VC dimension (>= 2: gather always rides VC1)."""
+    return max(cfg.vcs, 2)
+
+
+def link_array_size(cfg: NocConfig) -> int:
+    """4 directed links per node (E/W/S/N)."""
+    return 4 * cfg.width * cfg.height
+
+
+def port_array_size(cfg: NocConfig) -> int:
+    """2 (inj/ej) x VCs ports per node."""
+    return 2 * effective_vcs(cfg) * cfg.width * cfg.height
+
+
 class _Packet:
-    src: Coord
-    dst: Coord
-    flits: int
-    vc: int
-    inject: bool
-    eject: bool
-    reduce_words: int
-    on_hop: Optional[Callable[[Coord, int], None]]
-    on_done: Optional[Callable[[int], None]]
-    links: list = field(default_factory=list)
-    stage: int = -1          # -1 = inject, 0..len(links)-1 = hop i, len = eject
-    head: int = 0
+    __slots__ = ("src", "dst", "flits", "vc", "inject", "eject",
+                 "reduce_words", "on_hop", "on_done", "links", "link_ids",
+                 "inj_port", "ej_port", "stage", "head")
+
+    def __init__(self, src, dst, flits, vc, inject, eject, reduce_words,
+                 on_hop, on_done):
+        self.src = src
+        self.dst = dst
+        self.flits = flits
+        self.vc = vc
+        self.inject = inject
+        self.eject = eject
+        self.reduce_words = reduce_words
+        self.on_hop = on_hop
+        self.on_done = on_done
+        self.links = ()
+        self.link_ids: tuple = ()   # per link: flat int id or overflow key
+        self.inj_port = None     # int index, or tuple key in the overflow dict
+        self.ej_port = None
+        self.stage = -1          # -1 = inject, 0..len(links)-1 = hop i, len = eject
+        self.head = 0
 
 
 class NocSim:
@@ -50,14 +156,28 @@ class NocSim:
 
     def __init__(self, cfg: NocConfig):
         self.cfg = cfg
-        self.link_free: dict[tuple[Coord, Coord], int] = {}
-        self.port_free: dict[tuple[str, int, Coord], int] = {}
+        self._w, self._h = cfg.width, cfg.height
+        self._nodes = self._w * self._h
+        self._vcs = effective_vcs(cfg)
+        #: Flat busy-until arrays: 4 directed links per node, 2 (inj/ej)
+        #: x vcs ports per node.  See ``_overflow`` for out-of-mesh keys.
+        self.link_free: list[int] = [0] * link_array_size(cfg)
+        self.port_free: list[int] = [0] * port_array_size(cfg)
+        self._overflow: dict = {}
         self.ledger = EnergyLedger()
         self._heap: list = []
         self._seq = itertools.count()
         self.now = 0
 
     # ------------------------------------------------------------------ #
+    def _port_id(self, kind: int, vc: int, node: Coord):
+        """Flat port index (kind 0 = inject, 1 = eject); tuple key when the
+        node/VC falls outside the configured mesh (overflow dict)."""
+        pid = port_index(kind, vc, node, self._w, self._h, self._vcs)
+        if pid is not None:
+            return pid
+        return ("inj" if kind == 0 else "ej", vc, node)
+
     def enqueue(self, t: int, src: Coord, dst: Coord, flits: int, *,
                 vc: int = 0, inject: bool = True, eject: bool = True,
                 reduce_words: int = 0,
@@ -77,13 +197,23 @@ class NocSim:
         """
         pkt = _Packet(src, dst, flits, vc, inject, eject, reduce_words,
                       on_hop, on_done)
-        pkt.links = links_of(path if path is not None else xy_route(src, dst))
+        if path is not None:
+            _, pkt.link_ids, pkt.links = path_link_ids(self._w, self._h,
+                                                       tuple(path))
+        else:
+            _, pkt.link_ids, pkt.links = route_link_ids(self._w, self._h,
+                                                        src, dst)
+        if inject:
+            pkt.inj_port = self._port_id(0, vc, src)
+        if eject:
+            pkt.ej_port = self._port_id(1, vc, dst)
         pkt.stage = -1 if inject else 0
         pkt.head = t
         # Energy that is path-determined (independent of contention):
-        self.ledger.flit_routers += flits * (len(pkt.links) + 1)
-        self.ledger.flit_links += flits * len(pkt.links)
-        self.ledger.packet_hops += len(pkt.links)
+        n_links = len(pkt.links)
+        self.ledger.flit_routers += flits * (n_links + 1)
+        self.ledger.flit_links += flits * n_links
+        self.ledger.packet_hops += n_links
         self.ledger.router_adds += reduce_words
         if inject:
             self.ledger.ni_flits += flits
@@ -100,49 +230,68 @@ class NocSim:
     def run(self) -> int:
         """Process all events; returns the makespan (last completion time)."""
         cfg = self.cfg
+        link_free = self.link_free
+        port_free = self.port_free
+        overflow = self._overflow
         makespan = 0
         while self._heap:
             t, _, pkt = heapq.heappop(self._heap)
             self.now = max(self.now, t)
 
             if pkt.stage == -1:                          # injection port
-                key = ("inj", pkt.vc, pkt.src)
-                free = self.port_free.get(key, 0)
+                pid = pkt.inj_port
+                if type(pid) is int:
+                    free = port_free[pid]
+                else:
+                    free = overflow.get(pid, 0)
                 if free > t:
                     self._push(free, pkt)
                     continue
-                self.port_free[key] = t + pkt.flits
+                if type(pid) is int:
+                    port_free[pid] = t + pkt.flits
+                else:
+                    overflow[pid] = t + pkt.flits
                 pkt.head = t + cfg.ni_cycles
                 pkt.stage = 0
                 self._push(pkt.head, pkt)
                 continue
 
             if pkt.stage < len(pkt.links):               # link hop
-                link = pkt.links[pkt.stage]
                 ready = pkt.head + cfg.router_cycles
-                free = self.link_free.get(link, 0)
+                lid = pkt.link_ids[pkt.stage]
+                flat = type(lid) is int
+                free = link_free[lid] if flat else overflow.get(lid, 0)
                 if free > ready:
                     pkt.head = free - cfg.router_cycles
                     self._push(free, pkt)
                     continue
-                self.link_free[link] = ready + pkt.flits
+                if flat:
+                    link_free[lid] = ready + pkt.flits
+                else:
+                    overflow[lid] = ready + pkt.flits
                 pkt.head = ready + cfg.link_cycles
                 pkt.stage += 1
                 if pkt.on_hop is not None:
-                    pkt.on_hop(link[1], pkt.head)
+                    pkt.on_hop(pkt.links[pkt.stage - 1][1], pkt.head)
                 self._push(pkt.head, pkt)
                 continue
 
             # ejection (or in-router completion when eject=False)
             if pkt.eject:
-                key = ("ej", pkt.vc, pkt.dst)
+                pid = pkt.ej_port
                 ready = pkt.head + cfg.router_cycles
-                free = self.port_free.get(key, 0)
+                if type(pid) is int:
+                    free = port_free[pid]
+                else:
+                    free = overflow.get(pid, 0)
                 if free > ready:
                     pkt.head = free - cfg.router_cycles
                     self._push(free, pkt)
                     continue
-                self.port_free[key] = ready + pkt.flits
+                if type(pid) is int:
+                    port_free[pid] = ready + pkt.flits
+                else:
+                    overflow[pid] = ready + pkt.flits
                 done = ready + cfg.ni_cycles + pkt.flits - 1
             else:
                 done = pkt.head + pkt.flits - 1

@@ -1,8 +1,21 @@
-"""2D-mesh topology and dimension-ordered (XY) routing."""
+"""2D-mesh topology and dimension-ordered (XY) routing.
+
+Routes are pure functions of ``(src, dst)``, so :func:`xy_route` /
+:func:`links_of` are memoized — the simulator replays the same few hundred
+(src, dst) pairs millions of times across a sweep, and deriving the path
+per packet dominated ``enqueue`` before PR 4 (DESIGN.md S10).  The
+uncached derivations stay exposed (``xy_route_uncached``) as the ground
+truth the regression tests compare against; ``ROUTE_STATS`` counts actual
+derivations so tests can assert repeated enqueues never re-derive.
+"""
 from __future__ import annotations
 
 from dataclasses import dataclass
+from functools import lru_cache
 from typing import Optional
+
+#: Incremented once per *derived* (not cache-served) route.
+ROUTE_STATS = {"derived": 0}
 
 
 @dataclass(frozen=True)
@@ -36,8 +49,12 @@ class Mesh:
         return self.width * self.height
 
 
-def xy_route(src: tuple[int, int], dst: tuple[int, int]) -> list[tuple[int, int]]:
-    """Dimension-ordered XY route: list of nodes visited, inclusive of endpoints."""
+def xy_route_uncached(src: tuple[int, int],
+                      dst: tuple[int, int]) -> list[tuple[int, int]]:
+    """Dimension-ordered XY route: list of nodes visited, inclusive of
+    endpoints.  Unmemoized ground truth (regression tests compare the
+    cached path against this)."""
+    ROUTE_STATS["derived"] += 1
     x, y = src
     dx, dy = dst
     path = [(x, y)]
@@ -50,6 +67,26 @@ def xy_route(src: tuple[int, int], dst: tuple[int, int]) -> list[tuple[int, int]
         y += step
         path.append((x, y))
     return path
+
+
+@lru_cache(maxsize=None)
+def xy_route_tuple(src: tuple[int, int],
+                   dst: tuple[int, int]) -> tuple[tuple[int, int], ...]:
+    """Memoized XY route as an immutable tuple (safe to share)."""
+    return tuple(xy_route_uncached(src, dst))
+
+
+def xy_route(src: tuple[int, int], dst: tuple[int, int]) -> list[tuple[int, int]]:
+    """Dimension-ordered XY route (memoized; returns a fresh list)."""
+    return list(xy_route_tuple(src, dst))
+
+
+@lru_cache(maxsize=None)
+def route_links(src: tuple[int, int], dst: tuple[int, int],
+                ) -> tuple[tuple[tuple[int, int], tuple[int, int]], ...]:
+    """Memoized directed links of the XY route (the ``enqueue`` hot path)."""
+    path = xy_route_tuple(src, dst)
+    return tuple(zip(path[:-1], path[1:]))
 
 
 def yx_route(src: tuple[int, int], dst: tuple[int, int]) -> list[tuple[int, int]]:

@@ -32,9 +32,12 @@ from __future__ import annotations
 
 import math
 from dataclasses import dataclass
+from functools import lru_cache
 from typing import Optional
 
 from ..ina_model import DEFAULT_Q_BITS, ConvLayer, p_num
+from .compiled import (CompiledProgram, UncompilableProgram, compile_program,
+                       compiled_enabled)
 from .router import EnergyLedger, NocConfig
 from .simcache import SIM_CACHE
 from .simulator import NocSim
@@ -64,7 +67,7 @@ class LayerResult:
         return self.total_energy_pj / max(self.latency_cycles, 1.0)
 
 
-@dataclass
+@dataclass(frozen=True)
 class _Plan:
     p: int                    # P#: PEs per chain (clamped to the column height)
     g: int                    # chains per column
@@ -77,9 +80,13 @@ class _Plan:
     weight_bits_per_router: int   # per fill
 
 
+@lru_cache(maxsize=None)
 def _plan(layer: ConvLayer, cfg: NocConfig, e_pes: int, mode: str,
           q_bits: int = DEFAULT_Q_BITS, groups: Optional[int] = None) -> _Plan:
     """Lay ``layer`` onto the (possibly rectangular) mesh under ``mode``.
+
+    Memoized: plans are pure functions of frozen inputs, and the mapper's
+    analytic ranking re-plans the same (layer, mapping) pairs constantly.
 
     ``q_bits`` scales the weight precision through Eqs. (1)-(2); ``groups``
     overrides the chains-per-column count G (mapper search axis; clamped to
@@ -168,6 +175,80 @@ def _os_weight_stream_round(plan: _Plan, cfg: NocConfig,
 # --------------------------------------------------------------------------- #
 # Accumulation + gather rounds (planner-emitted schedule, event-driven replay)
 # --------------------------------------------------------------------------- #
+@dataclass(frozen=True)
+class CompiledWindow:
+    """One window's packet program, recorded once and replayed flat.
+
+    The program (sources, destinations, flit counts, VCs, dependency
+    edges) of a WS/OS window depends only on the plan-shape key, so it is
+    compiled on first miss and replayed via
+    :class:`~repro.core.noc.compiled.CompiledProgram` without rebuilding
+    the PacketOps or the engine's per-op closures (DESIGN.md S10).
+    """
+
+    key: tuple
+    program: CompiledProgram
+
+    def replay(self) -> tuple[float, EnergyLedger]:
+        latency, ledger, _, _ = self.program.run()
+        return float(latency), ledger
+
+
+#: Plan-shape key -> CompiledWindow.  Populated only while the result
+#: cache is disabled (``--no-cache`` replays the same window repeatedly);
+#: with the cache on, a window's first replay lands in SIM_CACHE and the
+#: replicated program would be dead weight.
+_WINDOW_PROGRAMS: dict = {}
+
+#: Window-length-free key -> one compiled round; windows of any length
+#: replicate it (rounds are dependency-disjoint by construction).
+_ROUND_PROGRAMS: dict = {}
+
+
+def clear_compiled_caches() -> None:
+    """Forget every recorded program/plan (cold-start measurement aid).
+
+    Never needed for correctness — programs are pure functions of their
+    keys — only to measure genuinely cold runs (``bench_mapper``) or to
+    bound memory.
+    """
+    from . import simulator, topology
+
+    _WINDOW_PROGRAMS.clear()
+    _ROUND_PROGRAMS.clear()
+    _plan.cache_clear()
+    simulator._LINK_ID_CACHE.clear()
+    topology.xy_route_tuple.cache_clear()
+    topology.route_links.cache_clear()
+
+
+def _compiled_window(key: tuple, cfg: NocConfig, mode: str, window: int,
+                     plan: _Plan, e_pes: int) -> Optional[CompiledWindow]:
+    """Build (or fetch) the CompiledWindow for a plan-shape key."""
+    from .collective.schedule import ws_round_program
+
+    cw = _WINDOW_PROGRAMS.get(key)
+    if cw is not None:
+        return cw
+    round_key = (cfg, mode, plan.g, plan.p, plan.gather_flits,
+                 plan.unicast_flits, e_pes)
+    base = _ROUND_PROGRAMS.get(round_key)
+    if base is None:
+        prog = ws_round_program(cfg, mode, 1, g=plan.g, p=plan.p,
+                                gather_flits=plan.gather_flits,
+                                unicast_flits=plan.unicast_flits,
+                                e_pes=e_pes)
+        try:
+            base = compile_program(prog, cfg)
+        except UncompilableProgram:     # exotic config: heap fallback
+            return None
+        _ROUND_PROGRAMS[round_key] = base
+    cw = CompiledWindow(key, base.replicate(window))
+    if not SIM_CACHE.enabled:
+        _WINDOW_PROGRAMS[key] = cw
+    return cw
+
+
 def _sim_rounds_window(plan: _Plan, cfg: NocConfig, mode: str, window: int,
                        e_pes: int = 1) -> tuple[float, EnergyLedger]:
     """Simulate ``window`` back-to-back rounds; return (makespan, ledger).
@@ -176,7 +257,10 @@ def _sim_rounds_window(plan: _Plan, cfg: NocConfig, mode: str, window: int,
     accumulation (``ws_ina``/``os_gather``) or Fig. 4(a) relay chains gated
     before the collection (``ws_noina``) — is emitted by the collective
     planner (:func:`~repro.core.noc.collective.schedule.ws_round_program`)
-    and replayed by the program engine on the shared simulator.
+    and replayed on the event-driven simulator: through a
+    :class:`CompiledWindow` normally, or through the closure-based heap
+    engine under :func:`~repro.core.noc.compiled.compiled_disabled`
+    (ground truth; both are bit-identical, see tests/test_perf_layer.py).
 
     Results are memoized per plan shape in :data:`~repro.core.noc.simcache.
     SIM_CACHE` — the window program depends on the key below and not on the
@@ -191,6 +275,12 @@ def _sim_rounds_window(plan: _Plan, cfg: NocConfig, mode: str, window: int,
     hit = SIM_CACHE.get(key)
     if hit is not None:
         return hit
+    if compiled_enabled():
+        cw = _compiled_window(key, cfg, mode, window, plan, e_pes)
+        if cw is not None:
+            latency, ledger = cw.replay()
+            SIM_CACHE.put(key, latency, ledger)
+            return latency, ledger
     sim = NocSim(cfg)
     prog = ws_round_program(cfg, mode, window, g=plan.g, p=plan.p,
                             gather_flits=plan.gather_flits,
@@ -243,8 +333,19 @@ def simulate_layer(layer: ConvLayer, mode: str, cfg: NocConfig = NocConfig(),
 
     if mode.startswith("ws"):
         # Weight barrier: distribution must finish before MACs/psums start.
-        fill_cycles = sum(_fill_phase(plan, cfg, stream_ledger)
-                          for _ in range(plan.fills))
+        # One fill is computed and accumulated ``fills`` times (alexnet's FC
+        # tail alone runs thousands of identical fills per layer); the
+        # repeated float adds are kept so the ledger stays bit-identical to
+        # the historical per-fill loop, but the phase itself is derived once.
+        fill_cycles = 0
+        if plan.fills:
+            tmp = EnergyLedger()
+            one = _fill_phase(plan, cfg, tmp)
+            seg = stream_ledger.stream_flit_segments
+            for _ in range(plan.fills):
+                seg += tmp.stream_flit_segments
+            stream_ledger.stream_flit_segments = seg
+            fill_cycles = one * plan.fills
         latency = fill_cycles + max(noc_cycles, in_round * plan.rounds)
     else:
         # OS overlaps weight+input distribution with execution (paper SIV.B):

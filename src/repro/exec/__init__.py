@@ -1,0 +1,7 @@
+"""Parallel execution layer: deterministic process-pool fan-out.
+
+See :mod:`repro.exec.pool` (DESIGN.md S10).
+"""
+from .pool import default_jobs, parallel_map
+
+__all__ = ["default_jobs", "parallel_map"]

@@ -1,0 +1,101 @@
+"""Deterministic process-pool fan-out for simulation workloads.
+
+:func:`parallel_map` runs a picklable function over a list of items across
+a ``fork`` process pool and returns results **in item order** — the same
+list a serial ``[fn(x) for x in items]`` produces, which is what makes
+``--jobs N`` observationally equivalent to ``--jobs 1`` (asserted by
+``tests/test_perf_layer.py``): every window result is a pure function of
+its plan key, so recomputing in a worker instead of hitting the parent's
+warm cache yields bit-identical values.
+
+Cache movement is two-way:
+
+* **fork-time warmth** — workers are forked from the parent, so they start
+  with the parent's in-memory :data:`~repro.core.noc.simcache.SIM_CACHE`
+  (and every other memo) for free;
+* **merge-on-return** — each task additionally ships the window-cache
+  entries it created back to the parent, which merges them
+  (:meth:`SimCache.merge`; duplicate keys carry identical values, so merge
+  order cannot matter) so later sections and the persistent store see the
+  union.
+
+Fallbacks: ``jobs <= 1``, a single item, or a platform without the
+``fork`` start method (Windows) all run serially in-process.  Forked pool
+workers exit via ``os._exit`` and therefore never trigger the persistent
+cache's atexit merge — only the parent writes to disk.
+"""
+from __future__ import annotations
+
+import multiprocessing
+import os
+from itertools import islice
+from typing import Callable, Iterable, Optional, TypeVar
+
+from repro.core.noc.simcache import SIM_CACHE
+
+T = TypeVar("T")
+R = TypeVar("R")
+
+#: Set in pool workers; lets library code detect it runs inside a fan-out.
+_IN_WORKER = False
+
+
+def default_jobs(requested: Optional[int] = None) -> int:
+    """Resolve a ``--jobs`` value: explicit N, else 0/None = all cores."""
+    if requested is not None and requested > 0:
+        return requested
+    return max(1, os.cpu_count() or 1)
+
+
+#: Start-method override.  ``fork`` is the default because it is what
+#: makes fork-time cache warmth and test-local worker functions work; a
+#: parent with heavy thread pools (e.g. JAX fully initialised) can set
+#: ``REPRO_POOL_START=spawn``/``forkserver`` (workers then require
+#: importable module-level callables and start cold) or ``serial`` to
+#: disable fan-out entirely.
+POOL_START_ENV = "REPRO_POOL_START"
+
+
+def _fork_context():
+    method = os.environ.get(POOL_START_ENV, "fork")
+    if method == "serial":
+        return None
+    try:
+        return multiprocessing.get_context(method)
+    except ValueError:                              # pragma: no cover
+        return None
+
+
+def _run_task(payload):
+    """Pool worker: run one task, return (result, new window-cache entries)."""
+    global _IN_WORKER
+    _IN_WORKER = True
+    fn, item = payload
+    before = len(SIM_CACHE._store)
+    result = fn(item)
+    # New entries are the insertion-ordered tail (the store never shrinks
+    # inside a task); avoids hashing the whole store per task.
+    delta = SIM_CACHE.export(
+        list(islice(iter(SIM_CACHE._store), before, None)))
+    return result, delta
+
+
+def parallel_map(fn: Callable[[T], R], items: Iterable[T],
+                 jobs: int = 1) -> list[R]:
+    """``[fn(x) for x in items]`` across a fork pool, results in order.
+
+    ``fn`` must be a module-level (picklable) callable and deterministic;
+    window-cache entries created by workers are merged back into the
+    parent cache.  Serial fallback keeps single-job runs allocation-free.
+    """
+    items = list(items)
+    ctx = _fork_context()
+    if jobs <= 1 or len(items) <= 1 or ctx is None or _IN_WORKER:
+        return [fn(it) for it in items]
+    with ctx.Pool(min(jobs, len(items))) as pool:
+        out = pool.map(_run_task, [(fn, it) for it in items])
+    results = []
+    for result, delta in out:
+        SIM_CACHE.merge(delta)
+        results.append(result)
+    return results

@@ -47,6 +47,14 @@ def main(argv: list[str] | None = None) -> int:
                     help="comma-separated subset of alexnet,vgg16,resnet50")
     ap.add_argument("--no-cache", action="store_true",
                     help="bypass the plan-keyed window cache (ground truth)")
+    ap.add_argument("--jobs", type=int, default=None, metavar="N",
+                    help="fan sweeps/mapper search over N processes "
+                         "(0 = all cores; default 1)")
+    ap.add_argument("--cache-dir", default=None, metavar="DIR",
+                    help="persistent window-cache directory (default "
+                         f"${simcache.CACHE_DIR_ENV} or results/.simcache)")
+    ap.add_argument("--no-persist", action="store_true",
+                    help="in-memory window cache only (no on-disk store)")
     args = ap.parse_args(argv)
 
     sweep: SweepConfig = QUICK_SWEEP if args.quick else DEFAULT_SWEEP
@@ -70,11 +78,20 @@ def main(argv: list[str] | None = None) -> int:
             ap.error(f"unknown workloads {unknown}; "
                      f"pick from {sorted(WORKLOADS)}")
         overrides["workloads"] = workloads
+    if args.jobs is not None:
+        from repro.exec import default_jobs
+        if args.jobs < 0:
+            ap.error("--jobs must be >= 0 (0 = all cores)")
+        overrides["jobs"] = default_jobs(args.jobs if args.jobs else None)
     if overrides:
         sweep = dataclasses.replace(sweep, **overrides)
 
+    loaded = 0
     if args.no_cache:
         simcache.configure(False)
+    elif not args.no_persist:
+        cache_dir = args.cache_dir or simcache.SIM_CACHE.persist_default_dir()
+        loaded = simcache.SIM_CACHE.persist(cache_dir)
     sections = tuple(s for s in args.sections.split(",") if s)
     unknown = [s for s in sections if s not in SECTIONS]
     if unknown:
@@ -91,9 +108,16 @@ def main(argv: list[str] | None = None) -> int:
                      f"energy_x={avg['energy_x']:.3f})")
         print(line)
     cache = meta["cache"]
+    persisted = ""
+    if not args.no_cache and not args.no_persist:
+        saved = simcache.SIM_CACHE.save()
+        persisted = (f"; persistent store: {loaded} rows loaded, "
+                     f"{saved} saved ({simcache.SIM_CACHE.stats()['persist_dir']})")
     print(f"artifacts in {args.out}/ (summary.md, benchmarks.csv, "
           f"per-section JSON); cache: {cache['entries']} entries, "
-          f"{cache['hits']} hits / {cache['misses']} misses")
+          f"{cache['hits']} hits / {cache['misses']} misses "
+          f"({cache['hit_rate']:.1%} hit rate)"
+          f"{persisted}")
     return 0
 
 

@@ -74,10 +74,17 @@ def summary_markdown(results: dict) -> str:
     if meta:
         cache = meta.get("cache", {})
         timings = meta.get("elapsed_s", {})
+        hit_rate = cache.get("hit_rate")
+        rate = f", {hit_rate:.1%} hit rate" if hit_rate is not None else ""
+        disk = cache.get("disk_hits")
+        disk_s = f", {disk} from the persistent store" if disk else ""
+        jobs = sweep.get("jobs")
         parts += ["## Run stats", "",
                   "Section timings: " + ", ".join(
-                      f"{k} {v:.2f}s" for k, v in timings.items()),
+                      f"{k} {v:.2f}s" for k, v in timings.items())
+                  + (f" (jobs={jobs})" if jobs and jobs > 1 else ""),
                   f"Window cache: {cache.get('entries')} entries, "
-                  f"{cache.get('hits')} hits / {cache.get('misses')} misses "
+                  f"{cache.get('hits')} hits / {cache.get('misses')} misses"
+                  f"{rate}{disk_s} "
                   f"(see EXPERIMENTS.md)", ""]
     return "\n".join(parts)

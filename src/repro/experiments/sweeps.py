@@ -31,6 +31,7 @@ from repro.core.noc import NocConfig, SIM_CACHE
 from repro.core.noc.power import (Improvement, ws_ina_improvement,
                                   ws_vs_os_improvement)
 from repro.core.workloads import ALEXNET, VGG16, WORKLOADS
+from repro.exec import parallel_map
 
 #: Paper-reported headline numbers, attached to every emitted figure.
 PAPER_REFERENCE = {
@@ -54,6 +55,7 @@ class SweepConfig:
     table_n_list: tuple[int, ...] = (8, 16)     # Tables I/II mesh sizes
     sim_rounds: int = 16                        # simulated window length
     workloads: tuple[str, ...] = ("alexnet", "vgg16", "resnet50")
+    jobs: int = 1                               # process-pool width (--jobs)
     # ---- mapper section (DESIGN.md S9) -----------------------------------
     mapper_space: str = "full"                  # "full" | "quick" MapperConfig
     mapper_transformers: tuple[str, ...] = ("llama3-8b", "qwen2-1.5b")
@@ -92,15 +94,23 @@ def run_tables(sweep: SweepConfig = DEFAULT_SWEEP) -> dict:
             "rows": rows}
 
 
+def _improvement_task(payload) -> dict:
+    """One (workload, E, N) improvement row — the pool-fanout unit of the
+    fig sweeps.  Top-level so :func:`repro.exec.parallel_map` can pickle it.
+    """
+    improve, name, e, cfg, sim_rounds, extra = payload
+    t0 = time.time()
+    imp = improve(name, WORKLOADS[name], e, cfg, sim_rounds)
+    return _imp_row(imp, elapsed_us=(time.time() - t0) * 1e6, **extra)
+
+
 def _run_fig(figure: str, sweep: SweepConfig,
              improve: Callable[..., Improvement]) -> dict:
-    rows = []
-    for name in sweep.workloads:
-        for e in sweep.e_list:
-            t0 = time.time()
-            imp = improve(name, WORKLOADS[name], e, sweep.cfg(),
-                          sweep.sim_rounds)
-            rows.append(_imp_row(imp, elapsed_us=(time.time() - t0) * 1e6))
+    rows = parallel_map(
+        _improvement_task,
+        [(improve, name, e, sweep.cfg(), sweep.sim_rounds, {})
+         for name in sweep.workloads for e in sweep.e_list],
+        jobs=sweep.jobs)
     avg = {k: sum(r[k] for r in rows) / len(rows)
            for k in ("latency_x", "power_x", "energy_x")}
     return {"figure": figure, "paper_reference": PAPER_REFERENCE[figure],
@@ -119,10 +129,13 @@ def run_fig10_12(sweep: SweepConfig = DEFAULT_SWEEP) -> dict:
 
 def run_mesh_scaling(sweep: SweepConfig = DEFAULT_SWEEP) -> dict:
     """N x E scaling of the WS+INA gain (the paper only reports N=8)."""
-    rows = [_imp_row(ws_ina_improvement(name, WORKLOADS[name], e,
-                                        sweep.cfg(n), sweep.sim_rounds), n=n)
-            for n in sweep.n_list for name in sweep.workloads
-            for e in sweep.e_list]
+    rows = parallel_map(
+        _improvement_task,
+        [(ws_ina_improvement, name, e, sweep.cfg(n), sweep.sim_rounds,
+          {"n": n})
+         for n in sweep.n_list for name in sweep.workloads
+         for e in sweep.e_list],
+        jobs=sweep.jobs)
     return {"figure": "mesh_scaling",
             "paper_reference": PAPER_REFERENCE["mesh_scaling"],
             "sim_rounds": sweep.sim_rounds, "rows": rows}
@@ -153,7 +166,7 @@ def run_mapper(sweep: SweepConfig = DEFAULT_SWEEP) -> dict:
     rows, pareto, schedules = [], {}, {}
     for name, layers in workloads.items():
         t0 = time.time()
-        out = search_network(name, layers, mcfg)
+        out = search_network(name, layers, mcfg, jobs=sweep.jobs)
         rows.append({
             "workload": name,
             "layers": len(layers),
@@ -269,10 +282,13 @@ def run_all(sweep: SweepConfig = DEFAULT_SWEEP,
     # Report cache activity as deltas so the artifact describes *this* run
     # even when earlier work in the process warmed the process-wide cache.
     cache_after = SIM_CACHE.stats()
+    delta = {k: cache_after[k] - cache_before[k]
+             for k in ("hits", "misses", "disk_hits")}
+    looked = delta["hits"] + delta["misses"]
     cache = {"enabled": cache_after["enabled"],
              "entries": cache_after["entries"],
-             **{k: cache_after[k] - cache_before[k]
-                for k in ("hits", "misses")}}
+             "hit_rate": delta["hits"] / looked if looked else 0.0,
+             "persist_dir": cache_after["persist_dir"], **delta}
     results["_meta"] = {"sweep": asdict(sweep), "elapsed_s": timings,
                         "cache": cache}
     (out / "summary.md").write_text(summary_markdown(results))

@@ -20,12 +20,16 @@ total sort keys, cache hits bit-identical to ground truth.
 """
 from __future__ import annotations
 
+import dataclasses
 from dataclasses import dataclass, field
+from itertools import islice
 from typing import Optional, Sequence
 
 from repro.core.noc import SIM_CACHE, NocConfig
+from repro.core.noc.compiled import compiled_enabled
 from repro.core.noc.traffic import LayerResult, simulate_layer
 from repro.core.ops import LayerShape
+from repro.exec import parallel_map
 
 from .schedule import LayerAssignment, NetworkSchedule
 from .space import (Mapping, MapperConfig, PAPER_MAPPING, analytic_latency,
@@ -52,13 +56,49 @@ class SearchOutcome:
             / max(self.best.total_energy_pj, 1.0)
 
 
+# --------------------------------------------------------------------------- #
+# Layer-result memo: a LayerResult is a pure function of the layer's Eq.(1)-(4)
+# shape (R, C, F, outputs) and the mapping, never of the layer identity —
+# ResNet-50 repeats the same bottleneck shapes dozens of times, and every
+# hardware point re-scores the baseline anchor.  Keyed off
+# ``SIM_CACHE.generation`` so ``SIM_CACHE.clear()`` invalidates it too, and
+# bypassed entirely when the window cache is disabled (ground-truth mode).
+# --------------------------------------------------------------------------- #
+_EVAL_MEMO: dict = {"gen": -1, "store": {}}
+
+
+def _eval_store() -> dict:
+    if _EVAL_MEMO["gen"] != SIM_CACHE.generation:
+        _EVAL_MEMO["gen"] = SIM_CACHE.generation
+        _EVAL_MEMO["store"] = {}
+    return _EVAL_MEMO["store"]
+
+
+def _eval_key(layer: LayerShape, mapping: Mapping, base_cfg: NocConfig,
+              sim_rounds: int) -> tuple:
+    return ((layer.R, layer.C, layer.F, layer.outputs), mapping, base_cfg,
+            sim_rounds)
+
+
 def evaluate_mapping(layer: LayerShape, mapping: Mapping,
                      base_cfg: NocConfig = NocConfig(),
                      sim_rounds: int = 16) -> LayerResult:
     """Exact (event-driven, cache-backed) cost of one mapping."""
-    return simulate_layer(layer, mapping.mode, mapping.cfg(base_cfg),
-                          mapping.e_pes, sim_rounds, q_bits=mapping.q_bits,
-                          groups=mapping.groups)
+    if not SIM_CACHE.enabled or not compiled_enabled():
+        return simulate_layer(layer, mapping.mode, mapping.cfg(base_cfg),
+                              mapping.e_pes, sim_rounds,
+                              q_bits=mapping.q_bits, groups=mapping.groups)
+    store = _eval_store()
+    key = _eval_key(layer, mapping, base_cfg, sim_rounds)
+    hit = store.get(key)
+    if hit is None:
+        hit = simulate_layer(layer, mapping.mode, mapping.cfg(base_cfg),
+                             mapping.e_pes, sim_rounds,
+                             q_bits=mapping.q_bits, groups=mapping.groups)
+        store[key] = hit
+    # Hand out a copy re-stamped with the caller's layer identity: the memo
+    # collapses identically-shaped layers, but results name their layer.
+    return dataclasses.replace(hit, name=layer.name)
 
 
 def _choose(results: list[tuple[Mapping, LayerResult]],
@@ -90,13 +130,57 @@ def _pareto(schedules: list[NetworkSchedule]) -> list[NetworkSchedule]:
     return front
 
 
+def _score_hardware(payload) -> tuple[NetworkSchedule, int, int, dict]:
+    """Score every layer on one hardware point (a pool-fanout unit).
+
+    Returns ``(schedule, candidates, simulated, layer-memo delta)``; the
+    delta ships memoized LayerResults back to the parent process so a
+    warm parent keeps getting warmer across ``--jobs`` fan-outs.
+    """
+    workload, layers, base_results, hw, mcfg, base_cfg = payload
+    memo_before = len(_eval_store())
+    w, h, e = hw
+    # The hardware's own paper-style mapping is always scored exactly,
+    # whatever the analytic ranking says — it anchors the energy-budget
+    # pool (and *is* the baseline mapping on the baseline hardware).
+    anchor = Mapping(w, h, e, "ws", "ina", mcfg.q_list[0], None)
+    n_cands = n_sim = 0
+    assignments = []
+    for layer, base_r in zip(layers, base_results):
+        cands = layer_candidates(layer, hw, mcfg)
+        n_cands += len(cands)
+        ranked = sorted(cands, key=lambda m: (
+            analytic_latency(layer, m, base_cfg), m.sort_key))
+        keep = ranked[:mcfg.prune_keep]
+        if anchor in cands and anchor not in keep:
+            keep.append(anchor)
+        results = [(m, evaluate_mapping(layer, m, base_cfg,
+                                        mcfg.sim_rounds)) for m in keep]
+        n_sim += len(results)
+        m, r = _choose(results, base_r.total_energy_pj)
+        assignments.append(
+            LayerAssignment.from_result(layer, m, r, base_cfg))
+    schedule = NetworkSchedule(workload=workload, hardware=hw,
+                               assignments=tuple(assignments))
+    # New memo entries = everything appended past the starting length
+    # (insertion-ordered dict, never deleted from within a generation).
+    store = _eval_store()
+    delta = {k: store[k]
+             for k in islice(iter(store), memo_before, None)}
+    return schedule, n_cands, n_sim, delta
+
+
 def search_network(workload: str, layers: Sequence[LayerShape],
                    mcfg: MapperConfig = MapperConfig(),
                    base_cfg: NocConfig = NocConfig(),
-                   baseline_mapping: Mapping = PAPER_MAPPING) -> SearchOutcome:
+                   baseline_mapping: Mapping = PAPER_MAPPING,
+                   jobs: int = 1) -> SearchOutcome:
     """Search the mapping space for a whole network; emit the best schedule.
 
-    Deterministic: same (layers, mcfg, base_cfg) -> identical outcome.
+    Deterministic: same (layers, mcfg, base_cfg) -> identical outcome,
+    whatever ``jobs`` is — hardware points are scored across a process
+    pool (:mod:`repro.exec.pool`) and merged back in candidate order, and
+    every scored cost is a pure function of the plan shape.
     """
     cache_before = SIM_CACHE.stats()
     stats = {"candidates": 0, "simulated": 0, "hardware_evaluated": 0}
@@ -110,31 +194,19 @@ def search_network(workload: str, layers: Sequence[LayerShape],
             LayerAssignment.from_result(l, baseline_mapping, r, base_cfg)
             for l, r in zip(layers, base_results)))
 
+    hws = hardware_candidates(mcfg)
+    layers = tuple(layers)
+    scored = parallel_map(
+        _score_hardware,
+        [(workload, layers, base_results, hw, mcfg, base_cfg) for hw in hws],
+        jobs=jobs)
     schedules: list[NetworkSchedule] = []
-    for hw in hardware_candidates(mcfg):
+    for schedule, n_cands, n_sim, delta in scored:
         stats["hardware_evaluated"] += 1
-        w, h, e = hw
-        # The hardware's own paper-style mapping is always scored exactly,
-        # whatever the analytic ranking says — it anchors the energy-budget
-        # pool (and *is* the baseline mapping on the baseline hardware).
-        anchor = Mapping(w, h, e, "ws", "ina", mcfg.q_list[0], None)
-        assignments = []
-        for layer, base_r in zip(layers, base_results):
-            cands = layer_candidates(layer, hw, mcfg)
-            stats["candidates"] += len(cands)
-            ranked = sorted(cands, key=lambda m: (
-                analytic_latency(layer, m, base_cfg), m.sort_key))
-            keep = ranked[:mcfg.prune_keep]
-            if anchor in cands and anchor not in keep:
-                keep.append(anchor)
-            results = [(m, evaluate_mapping(layer, m, base_cfg,
-                                            mcfg.sim_rounds)) for m in keep]
-            stats["simulated"] += len(results)
-            m, r = _choose(results, base_r.total_energy_pj)
-            assignments.append(
-                LayerAssignment.from_result(layer, m, r, base_cfg))
-        schedules.append(NetworkSchedule(workload=workload, hardware=hw,
-                                         assignments=tuple(assignments)))
+        stats["candidates"] += n_cands
+        stats["simulated"] += n_sim
+        _eval_store().update(delta)
+        schedules.append(schedule)
 
     dominating = [s for s in schedules
                   if s.latency_cycles <= baseline.latency_cycles

@@ -31,10 +31,12 @@ from __future__ import annotations
 import dataclasses
 import math
 from dataclasses import dataclass
+from functools import lru_cache
 from typing import Optional
 
 from repro.core.ina_model import DEFAULT_Q_BITS, p_num
 from repro.core.noc import NocConfig
+from repro.core.noc.router import cached_field_hash
 from repro.core.noc.traffic import layer_plan
 from repro.core.ops import LayerShape
 
@@ -79,12 +81,24 @@ class Mapping:
     def cfg(self, base: NocConfig = NocConfig()) -> NocConfig:
         """The NocConfig this mapping simulates under (keyed by the cache)."""
         rows = None if self.height == self.width else self.height
-        return dataclasses.replace(base, n=self.width, rows=rows)
+        return _mesh_cfg(base, self.width, rows)
 
     def label(self) -> str:
         g = "max" if self.groups is None else str(self.groups)
         return (f"{self.width}x{self.height}xE{self.e_pes}:{self.dataflow}/"
                 f"{self.semantics}/q{self.q_bits}/g{g}")
+
+
+#: Mappings are dict keys in the layer-result memo and members of sort
+#: keys; cache their field hash like NocConfig's (see router.py).
+Mapping.__hash__ = cached_field_hash
+
+
+@lru_cache(maxsize=None)
+def _mesh_cfg(base: NocConfig, n: int, rows: Optional[int]) -> NocConfig:
+    """Memoized mesh reshape (``dataclasses.replace`` is surprisingly hot:
+    the search derives the same few configs tens of thousands of times)."""
+    return dataclasses.replace(base, n=n, rows=rows)
 
 
 #: The paper's fixed placement: 8x8 square, 1 PE/router, WS + INA, q=32,

@@ -1,0 +1,334 @@
+"""PR-4 performance layer: compiled programs, route memo, persistent cache,
+process-pool fan-out.
+
+Contracts under test (DESIGN.md S10):
+
+1. Route memoization returns exactly the unmemoized paths, and repeated
+   ``enqueue`` of the same (src, dst) never re-derives a route.
+2. Compiled flat-array replay is bit-identical (latency *and* full
+   EnergyLedger) to the closure-based heap engine across every fig7-12
+   plan shape, and round replication equals whole-window compilation.
+3. ``--jobs N`` changes wall-clock only: mapper rows, Pareto fronts, and
+   best schedules are identical for jobs=1 and jobs=4.
+4. The persistent window cache round-trips bit-identically, is invisible
+   when the schema hash or the NocConfig changes, and merges atomically.
+"""
+import dataclasses
+import json
+
+import pytest
+
+from repro.core.noc import (EnergyLedger, NocConfig, NocSim, SIM_CACHE,
+                            compile_program, compiled_disabled,
+                            fresh_sim_cache, sim_cache_disabled)
+from repro.core.noc import simcache, topology
+from repro.core.noc.collective.engine import run_program
+from repro.core.noc.collective.schedule import (plan_collective,
+                                                ws_round_program)
+from repro.core.noc.simcache import SimCache, schema_hash
+from repro.core.noc.topology import (ROUTE_STATS, links_of, route_links,
+                                     xy_route, xy_route_uncached)
+from repro.core.noc.traffic import MODES, _plan, simulate_layer
+from repro.core.workloads import ALEXNET, RESNET50, VGG16, WORKLOADS
+from repro.exec import parallel_map
+
+CFG = NocConfig()
+
+
+# --------------------------------------------------------------------------- #
+# 1. Route memoization
+# --------------------------------------------------------------------------- #
+def test_route_memo_identical_over_full_mesh():
+    """Cached xy_route/links_of match the unmemoized derivation for every
+    (src, dst) pair of the paper's 8x8 mesh."""
+    nodes = [(x, y) for x in range(8) for y in range(8)]
+    for src in nodes:
+        for dst in nodes:
+            truth = xy_route_uncached(src, dst)
+            assert xy_route(src, dst) == truth
+            assert list(route_links(src, dst)) == links_of(truth)
+
+
+def test_exotic_and_flat_packets_contend_on_shared_links():
+    """Per-link encoding: a packet with an out-of-mesh hop still reserves
+    its in-mesh links in the shared flat arrays, so it serializes against
+    ordinary packets on the same physical link (regression: per-packet
+    overflow fallback used to split the contention domains)."""
+    done = {}
+    sim = NocSim(CFG)
+    # A's path leaves the 8x8 mesh on its last hop; B shares (1,0)->(2,0).
+    # Distinct VCs keep the injection ports distinct, so any delay B sees
+    # can only come from the shared physical link.
+    sim.enqueue(0, (1, 0), (9, 0), 4, vc=1,
+                path=[(1, 0), (2, 0), (9, 0)],
+                on_done=lambda t: done.setdefault("a", t))
+    sim.enqueue(0, (1, 0), (3, 0), 4, vc=0,
+                on_done=lambda t: done.setdefault("b", t))
+    sim.run()
+    solo = NocSim(CFG)
+    solo.enqueue(0, (1, 0), (3, 0), 4, vc=0,
+                 on_done=lambda t: done.setdefault("b_solo", t))
+    solo.run()
+    assert done["b"] > done["b_solo"]            # contention was modeled
+
+
+def test_repeated_enqueue_does_not_rederive_route():
+    sim = NocSim(CFG)
+    sim.enqueue(0, (3, 1), (3, 6), 4)          # may derive (cold cache)
+    before = ROUTE_STATS["derived"]
+    for t in range(1, 6):
+        sim.enqueue(t, (3, 1), (3, 6), 4)      # must all be memo hits
+    assert ROUTE_STATS["derived"] == before
+    sim2 = NocSim(CFG)                          # fresh sim, same process memo
+    sim2.enqueue(0, (3, 1), (3, 6), 4)
+    assert ROUTE_STATS["derived"] == before
+
+
+# --------------------------------------------------------------------------- #
+# 2. Compiled replay == heap engine, bit for bit
+# --------------------------------------------------------------------------- #
+def _fig_plan_shapes():
+    """Distinct (cfg, mode, g, p, gather_flits, unicast_flits, e) shapes of
+    the full figs 7-12 evaluation (3 workloads x E in {1,2,4,8} x 3 modes)."""
+    shapes = {}
+    for layers in (ALEXNET, VGG16, RESNET50):
+        for layer in layers:
+            for mode in MODES:
+                for e in (1, 2, 4, 8):
+                    plan = _plan(layer, CFG, e, mode)
+                    key = (mode, plan.g, plan.p, plan.gather_flits,
+                           plan.unicast_flits, e)
+                    shapes.setdefault(key, (plan, mode, e))
+    return list(shapes.values())
+
+
+def _ledger_dict(ledger):
+    return dataclasses.asdict(ledger)
+
+
+def test_compiled_window_bit_identical_to_heap_on_fig_shapes():
+    shapes = _fig_plan_shapes()
+    assert len(shapes) > 10                      # the sweep is non-trivial
+    for plan, mode, e in shapes:
+        prog = ws_round_program(CFG, mode, 4, g=plan.g, p=plan.p,
+                                gather_flits=plan.gather_flits,
+                                unicast_flits=plan.unicast_flits, e_pes=e)
+        heap = run_program(prog, CFG, engine="heap")
+        latency, ledger, done, _ = compile_program(prog, CFG).run()
+        assert latency == heap.latency_cycles, (mode, e)
+        assert done == heap.done, (mode, e)
+        assert _ledger_dict(ledger) == _ledger_dict(heap.ledger), (mode, e)
+
+
+def test_replicated_round_equals_whole_window_compile():
+    for mode in MODES:
+        plan = _plan(ALEXNET[3], CFG, 2, mode)
+        kw = dict(g=plan.g, p=plan.p, gather_flits=plan.gather_flits,
+                  unicast_flits=plan.unicast_flits, e_pes=2)
+        whole = compile_program(ws_round_program(CFG, mode, 6, **kw), CFG)
+        tiled = compile_program(ws_round_program(CFG, mode, 1, **kw),
+                                CFG).replicate(6)
+        lat_w, led_w, done_w, _ = whole.run()
+        lat_t, led_t, done_t, _ = tiled.run()
+        assert (lat_w, done_w) == (lat_t, done_t)
+        assert _ledger_dict(led_w) == _ledger_dict(led_t)
+
+
+@pytest.mark.parametrize("op,algorithm", [
+    ("reduce", "reduce_bcast"), ("broadcast", "reduce_bcast"),
+    ("gather", "reduce_bcast"), ("allreduce", "reduce_bcast"),
+    ("allreduce", "rs_ag")])
+@pytest.mark.parametrize("semantics", ["ina", "eject_inject"])
+def test_engine_auto_matches_heap_for_collectives(op, algorithm, semantics):
+    """run_program's compiled dispatch is invisible for tree collectives
+    (multicast drops, path overrides, virtual ops included)."""
+    parts = [(x, y) for x in range(4) for y in range(4) if (x + y) % 2 == 0]
+    prog = plan_collective(op, parts, 512, CFG, algorithm=algorithm,
+                           semantics=semantics)
+    heap = run_program(prog, CFG, engine="heap")
+    auto = run_program(prog, CFG, engine="auto")
+    assert auto.latency_cycles == heap.latency_cycles
+    assert auto.done == heap.done
+    assert auto.delivered == heap.delivered
+    assert _ledger_dict(auto.ledger) == _ledger_dict(heap.ledger)
+
+
+@pytest.mark.parametrize("mode", MODES)
+def test_simulate_layer_identical_under_all_execution_modes(mode):
+    """Ground truth (heap, no caches) == compiled cold == compiled warm."""
+    layer = VGG16[8]
+    with fresh_sim_cache(), compiled_disabled(), sim_cache_disabled():
+        truth = simulate_layer(layer, mode, CFG, 2, sim_rounds=8)
+    with fresh_sim_cache():
+        cold = simulate_layer(layer, mode, CFG, 2, sim_rounds=8)
+        warm = simulate_layer(layer, mode, CFG, 2, sim_rounds=8)
+    for r in (cold, warm):
+        assert dataclasses.asdict(r) == dataclasses.asdict(truth), mode
+
+
+# --------------------------------------------------------------------------- #
+# 3. --jobs N is observationally equivalent to --jobs 1
+# --------------------------------------------------------------------------- #
+def _search(jobs):
+    from repro.core.workloads import mapper_workloads
+    from repro.mapper import QUICK_MAPPER, search_network
+    wl = mapper_workloads(conv=("alexnet",), transformers=())
+    return search_network("alexnet", wl["alexnet"], QUICK_MAPPER, jobs=jobs)
+
+
+def test_jobs_1_and_jobs_4_identical_mapper_output():
+    with fresh_sim_cache():
+        serial = _search(jobs=1)
+    with fresh_sim_cache():
+        fanned = _search(jobs=4)
+    assert serial.best.to_dict() == fanned.best.to_dict()
+    assert serial.baseline.to_dict() == fanned.baseline.to_dict()
+    assert [s.to_dict() for s in serial.pareto] \
+        == [s.to_dict() for s in fanned.pareto]
+    assert (serial.latency_x, serial.energy_x) \
+        == (fanned.latency_x, fanned.energy_x)
+    # Work accounting (not cache hit/miss split) is jobs-invariant too.
+    for k in ("candidates", "simulated", "hardware_evaluated"):
+        assert serial.stats[k] == fanned.stats[k]
+
+
+def _simulate_one(args):
+    layer_idx, e = args
+    r = simulate_layer(ALEXNET[layer_idx], "ws_ina", CFG, e, sim_rounds=4)
+    return r.latency_cycles
+
+
+def test_parallel_map_merges_worker_cache_entries():
+    with fresh_sim_cache():
+        before = len(SIM_CACHE)
+        out = parallel_map(_simulate_one, [(1, 1), (2, 2), (3, 4), (4, 8)],
+                           jobs=2)
+        assert len(out) == 4
+        assert len(SIM_CACHE) > before           # worker deltas merged back
+        with sim_cache_disabled(), compiled_disabled():
+            truth = [_simulate_one(a) for a in [(1, 1), (2, 2), (3, 4),
+                                                (4, 8)]]
+        assert out == truth
+
+
+# --------------------------------------------------------------------------- #
+# 4. Persistent on-disk cache
+# --------------------------------------------------------------------------- #
+def _window_key(cfg=CFG, window=4):
+    plan = _plan(ALEXNET[3], cfg, 1, "ws_ina")
+    return (cfg, "ws_ina", window, plan.g, plan.p, plan.gather_flits,
+            plan.unicast_flits, 1)
+
+
+def test_persistent_cache_round_trips_bit_identically(tmp_path):
+    writer = SimCache()
+    key = _window_key()
+    ledger = EnergyLedger(flit_routers=12, ni_flits=3.25, pe_adds=7)
+    writer.put(key, 123.0, ledger)
+    assert writer.save(tmp_path) == 1
+
+    reader = SimCache()
+    assert reader.load(tmp_path) == 1
+    hit = reader.get(key)
+    assert hit is not None
+    lat, led = hit
+    assert lat == 123.0
+    assert dataclasses.asdict(led) == dataclasses.asdict(ledger)
+    assert reader.stats()["disk_hits"] == 1
+    # A different NocConfig is a different key: nothing stale is served.
+    other = reader.get(_window_key(dataclasses.replace(CFG, n=4)))
+    assert other is None
+
+
+def test_persistent_cache_invisible_on_schema_change(tmp_path, monkeypatch):
+    writer = SimCache()
+    writer.put(_window_key(), 7.0, EnergyLedger())
+    writer.save(tmp_path)
+    monkeypatch.setattr(simcache, "SCHEMA_VERSION", simcache.SCHEMA_VERSION + 1)
+    reader = SimCache()
+    assert reader.load(tmp_path) == 0            # cold start, not an error
+    assert reader.get(_window_key()) is None
+
+
+def test_persistent_cache_save_merges_concurrent_writers(tmp_path):
+    a, b = SimCache(), SimCache()
+    ka, kb = _window_key(window=3), _window_key(window=5)
+    a.put(ka, 1.0, EnergyLedger(flit_links=1))
+    b.put(kb, 2.0, EnergyLedger(flit_links=2))
+    a.save(tmp_path)
+    b.save(tmp_path)                             # must union, not clobber
+    reader = SimCache()
+    assert reader.load(tmp_path) == 2
+    assert reader.get(ka)[0] == 1.0
+    assert reader.get(kb)[0] == 2.0
+
+
+def test_persistent_cache_warms_simulation_across_instances(tmp_path):
+    layer = ALEXNET[2]
+    with fresh_sim_cache():
+        first = simulate_layer(layer, "ws_ina", CFG, 1, sim_rounds=6)
+        assert SIM_CACHE.save(tmp_path) > 0
+    with fresh_sim_cache():
+        assert SIM_CACHE.load(tmp_path) > 0
+        again = simulate_layer(layer, "ws_ina", CFG, 1, sim_rounds=6)
+        stats = SIM_CACHE.stats()
+        assert stats["misses"] == 0              # fully served from disk
+        assert stats["disk_hits"] > 0
+    assert dataclasses.asdict(again) == dataclasses.asdict(first)
+
+
+def test_schema_hash_tracks_config_and_ledger_fields():
+    h = schema_hash()
+    assert isinstance(h, str) and len(h) == 16
+    assert h == schema_hash()                    # stable within a process
+
+
+def test_cache_file_is_json_with_schema(tmp_path):
+    c = SimCache()
+    c.put(_window_key(), 9.0, EnergyLedger())
+    c.save(tmp_path)
+    doc = json.loads((tmp_path / "window_cache.json").read_text())
+    assert doc["schema"] == schema_hash()
+    assert len(doc["entries"]) == 1
+
+
+# --------------------------------------------------------------------------- #
+# 5. Ledger copy + hit-rate stats (satellite 1)
+# --------------------------------------------------------------------------- #
+def test_energy_ledger_copy_is_cheap_and_isolated():
+    a = EnergyLedger(flit_routers=5, ni_flits=2.5, stream_flit_segments=7)
+    b = a.copy()
+    assert dataclasses.asdict(a) == dataclasses.asdict(b)
+    b.ni_flits += 100
+    assert a.ni_flits == 2.5                     # no aliasing
+    assert EnergyLedger.from_tuple(a.as_tuple()) == a
+
+
+def test_simcache_reports_hit_rate():
+    c = SimCache()
+    c.put("k", 1.0, EnergyLedger())
+    assert c.get("k") is not None
+    assert c.get("missing") is None
+    s = c.stats()
+    assert s["hits"] == 1 and s["misses"] == 1
+    assert s["hit_rate"] == 0.5
+
+
+def test_collective_cost_stays_hashable_with_ledger():
+    """The per-event ledger ships with CollectiveCost but is excluded from
+    eq/hash (regression: a mutable compare field made instances
+    unhashable)."""
+    from repro.core.noc.collective.cost import collective_cost
+    cost = collective_cost("reduce", 128.0, dataclasses.replace(CFG, n=4))
+    assert cost.ledger is not None
+    assert cost in {cost}                        # hashable, set-usable
+    assert cost == dataclasses.replace(cost, ledger=None)  # ledger not compared
+
+
+def test_cache_hands_out_independent_ledger_copies():
+    c = SimCache()
+    c.put("k", 1.0, EnergyLedger(pe_adds=1))
+    _, l1 = c.get("k")
+    l1.pe_adds += 99
+    _, l2 = c.get("k")
+    assert l2.pe_adds == 1                       # the stored copy is private
