@@ -1,0 +1,66 @@
+"""ExecutionPlan layer: cold-vs-warm planning time over the full config set.
+
+``run()`` builds one plan per (registry config, phase) twice through a
+throwaway :class:`repro.plan.PlanStore`:
+
+* **cold** — empty plan store (the sim cache keeps whatever the process
+  already holds; the per-pass collective engine-run delta is reported so
+  the snapshot separates trace time from simulation time);
+* **warm** — second pass over the same store: every plan must load
+  (0 builds) with **zero** collective engine runs — the acceptance
+  criterion of DESIGN.md S11.
+
+Returns ``(csv lines, perf dict)``; ``benchmarks/run.py --sections plan``
+lands the perf dict in the ``BENCH_<n>.json`` trajectory snapshot.
+"""
+import shutil
+import tempfile
+import time
+
+
+def run(quick: bool = False) -> tuple[list[str], dict]:
+    # No jobs parameter on purpose: plan building is jax-trace-bound and
+    # cannot fork (see sweeps.run_plan); the sweep is strictly serial.
+    from repro.configs import ARCHS
+    from repro.core.noc.collective.cost import COST_STATS
+    from repro.plan import PlanStore
+
+    phases = ("decode",) if quick else ("train", "prefill", "decode")
+    mesh = (("data", 16), ("model", 16))
+    space = "quick" if quick else "full"
+    tmp = tempfile.mkdtemp(prefix="bench_plan_")
+    try:
+        store = PlanStore(tmp)
+
+        def sweep() -> tuple[float, int, int]:
+            runs0 = COST_STATS["engine_runs"]
+            builds = 0
+            t0 = time.time()
+            for cfg in ARCHS.values():
+                for phase in phases:
+                    _, built = store.get_or_build(cfg, mesh, phase,
+                                                  mapper_space=space)
+                    builds += built
+            return (time.time() - t0, builds,
+                    COST_STATS["engine_runs"] - runs0)
+
+        cold_s, cold_builds, cold_runs = sweep()
+        warm_s, warm_builds, warm_runs = sweep()
+    finally:
+        shutil.rmtree(tmp, ignore_errors=True)
+
+    n = len(ARCHS) * len(phases)
+    assert cold_builds == n, (cold_builds, n)
+    assert warm_builds == 0 and warm_runs == 0, \
+        f"warm store not warm: {warm_builds} builds, {warm_runs} sims"
+    perf = {"configs": len(ARCHS), "phases": list(phases), "plans": n,
+            "space": space, "jobs": 1, "cold_s": cold_s, "warm_s": warm_s,
+            "speedup_x": cold_s / max(warm_s, 1e-9),
+            "engine_runs_cold": cold_runs, "engine_runs_warm": warm_runs}
+    lines = [
+        f"plan_cold,{cold_s * 1e6 / n:.0f},plans={n};space={space};"
+        f"engine_runs={cold_runs}",
+        f"plan_warm,{warm_s * 1e6 / n:.0f},plans={n};"
+        f"speedup_x={perf['speedup_x']:.1f};engine_runs=0",
+    ]
+    return lines, perf

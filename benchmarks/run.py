@@ -66,6 +66,13 @@ def _mapper_full(args):
     return lines
 
 
+def _plan(args):
+    from benchmarks import bench_plan
+    lines, perf = bench_plan.run(quick=args.quick)
+    _PERF["plan"] = perf
+    return lines
+
+
 def _roofline(args):
     if not os.path.exists("results/dryrun_singlepod.json"):
         return ["roofline_skipped,0,run_launch/dryrun_first"]
@@ -81,6 +88,7 @@ SECTIONS = {
     "collectives": _collectives,
     "mapper": _mapper,
     "mapper_full": _mapper_full,
+    "plan": _plan,
     "roofline": _roofline,
 }
 

@@ -21,6 +21,18 @@ from typing import Any, Optional
 import jax
 
 
+def compiled_cost_analysis(compiled) -> dict:
+    """``compiled.cost_analysis()`` across jax versions.
+
+    Old jax returns a one-element list of per-module dicts; new jax
+    returns the dict directly.  Callers always want the dict.
+    """
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0] if cost else {}
+    return cost
+
+
 def pallas_tpu_compiler_params(**kwargs):
     """``pltpu.CompilerParams`` across its rename from ``TPUCompilerParams``."""
     from jax.experimental.pallas import tpu as pltpu

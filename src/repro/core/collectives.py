@@ -29,7 +29,9 @@ All functions must be called inside ``shard_map`` with ``axis_name`` bound.
 from __future__ import annotations
 
 import functools
-from typing import Literal
+from contextlib import contextmanager
+from dataclasses import dataclass
+from typing import Literal, Optional
 
 import jax
 import jax.numpy as jnp
@@ -37,6 +39,10 @@ import jax.numpy as jnp
 from repro.compat import axis_size
 
 PsumMode = Literal["ina", "ina_ring", "eject_inject", "xla", "auto"]
+
+#: The ``--psum-mode`` choices every launch CLI offers (one source of
+#: truth for train/serve/dryrun argparse).
+CLI_PSUM_MODES = ("xla_spmd", "ina", "ina_ring", "eject_inject", "auto")
 
 
 # --------------------------------------------------------------------------- #
@@ -167,19 +173,101 @@ def choose_psum_mode(p: int, nbytes: int,
 
 
 # --------------------------------------------------------------------------- #
+# ExecutionPlan bridge: how ``mode="auto"`` call sites resolve.
+#
+# Three regimes, in priority order (DESIGN.md S11):
+#   1. *Recording* — inside :func:`record_psum_sites` the site's shape is
+#      appended to the active trace and a shape-preserving stand-in mode is
+#      returned without touching the simulator; the plan builder resolves
+#      the deduplicated sites afterwards, once each.
+#   2. *Plan-driven* — a :class:`repro.plan.ExecutionPlan` handed down from
+#      ``ParallelCtx`` answers from its precomputed per-site table.
+#   3. *Planless fallback* — the original trace-time path: the NoC
+#      collective cost model simulates the candidate strategies for this
+#      (span, payload), hoisted behind a process-wide memo so one site
+#      shape costs one resolution per process no matter how many identical
+#      call sites a model traces.
+# --------------------------------------------------------------------------- #
+@dataclass(frozen=True)
+class PsumSite:
+    """One ``mode="auto"`` call site, as seen at trace time."""
+
+    op: str                 # "psum" | "reduce_scatter"
+    p: int                  # axis span
+    nbytes: int             # per-device partial-sum payload
+
+
+_TRACE_SITES: Optional[list] = None
+
+
+@contextmanager
+def record_psum_sites():
+    """Collect ``mode="auto"`` sites instead of resolving them.
+
+    Inside the context every auto site appends a :class:`PsumSite` to the
+    yielded list and traces under a fixed stand-in strategy (``"ina"``;
+    every strategy is shape-preserving, so recording traces are exact).
+    Used by the plan builder's abstract trace; reentrant.
+    """
+    global _TRACE_SITES
+    prev, sites = _TRACE_SITES, []
+    _TRACE_SITES = sites
+    try:
+        yield sites
+    finally:
+        _TRACE_SITES = prev
+
+
+@functools.lru_cache(maxsize=None)
+def _fallback_choice(p: int, nbytes: int,
+                     objective: str = "latency") -> str:
+    """Per-process memo of the planless resolution (one simulation set per
+    distinct site shape per trace, however many sites share it)."""
+    return choose_psum_mode(p, nbytes, objective=objective)
+
+
+def resolve_auto_mode(op: str, p: int, nbytes: int,
+                      plan: Optional[object] = None) -> str:
+    """Resolve one ``mode="auto"`` site (see the regime table above).
+
+    ``plan`` is duck-typed: anything with a ``psum_mode(p, nbytes) ->
+    Optional[str]`` method (an :class:`repro.plan.ExecutionPlan`).  A plan
+    miss — a site the plan never saw, e.g. after a shape change — falls
+    back to the trace-time path rather than erroring, resolved under the
+    *plan's* objective so one trace never mixes decision criteria.
+    Known limit: the fallback costs under the default :class:`NocConfig`;
+    a plan built with a custom ``noc_cfg`` (no CLI does this) should
+    cover its sites or accept default-costed misses.
+    """
+    if _TRACE_SITES is not None:
+        _TRACE_SITES.append(PsumSite(op=op, p=p, nbytes=int(nbytes)))
+        return "ina"
+    if plan is not None:
+        mode = plan.psum_mode(p, int(nbytes))
+        if mode is not None:
+            return mode
+        return _fallback_choice(p, int(nbytes),
+                                getattr(plan, "objective", "latency"))
+    return _fallback_choice(p, int(nbytes))
+
+
+# --------------------------------------------------------------------------- #
 # Mode dispatch used by the tensor-parallel layers.
 # --------------------------------------------------------------------------- #
 def psum_with_mode(x: jax.Array, axis_name: str, mode: PsumMode,
-                   scatter_axis: int = 0) -> jax.Array:
+                   scatter_axis: int = 0,
+                   plan: Optional[object] = None) -> jax.Array:
     """Fully-reduced psum under the selected accumulation strategy.
 
-    ``mode="auto"`` resolves at trace time to the strategy with the best
-    *simulated mesh* cost for this tensor size and axis span (the sizes are
-    static under jit, so the NoC simulation runs once per shape).
+    ``mode="auto"`` resolves at trace time: from ``plan`` (an
+    :class:`repro.plan.ExecutionPlan` carried by ``ParallelCtx``) when one
+    is attached, else from the NoC collective cost model for this tensor
+    size and axis span (the sizes are static under jit, so the simulation
+    runs once per distinct shape — see :func:`resolve_auto_mode`).
     """
     if mode == "auto":
         p = axis_size(axis_name)
-        mode = choose_psum_mode(p, x.nbytes)
+        mode = resolve_auto_mode("psum", p, x.nbytes, plan)
         if mode == "ina_ring" and x.shape[scatter_axis] % p != 0:
             # The chunked ring needs the scatter axis to divide; fall back
             # to the compiler-scheduled in-network reduce, which doesn't.
@@ -194,10 +282,12 @@ def psum_with_mode(x: jax.Array, axis_name: str, mode: PsumMode,
 
 
 def reduce_scatter_with_mode(x: jax.Array, axis_name: str, mode: PsumMode,
-                             scatter_axis: int = 0) -> jax.Array:
+                             scatter_axis: int = 0,
+                             plan: Optional[object] = None) -> jax.Array:
     """Reduce-scattered psum (output stays sharded on ``scatter_axis``)."""
     if mode == "auto":
-        mode = choose_psum_mode(axis_size(axis_name), x.nbytes)
+        mode = resolve_auto_mode("reduce_scatter", axis_size(axis_name),
+                                 x.nbytes, plan)
     if mode == "eject_inject":
         # The baseline has no in-network reduction: full all-reduce, then the
         # caller's shard is sliced out locally (the ejected copy).

@@ -65,6 +65,26 @@ CACHE_DIR_ENV = "REPRO_SIMCACHE_DIR"
 _CACHE_FILE = "window_cache.json"
 
 
+def atomic_write_text(path: Path, text: str) -> None:
+    """Write ``text`` to ``path`` via tempfile + ``os.replace``.
+
+    Readers never observe a torn file; the temp file is unlinked on any
+    failure.  Shared by the window store below and the plan store
+    (:mod:`repro.plan.store`).
+    """
+    fd, tmp = tempfile.mkstemp(dir=path.parent, prefix=f".{path.name}-")
+    try:
+        with os.fdopen(fd, "w") as fh:
+            fh.write(text)
+        os.replace(tmp, path)
+    except BaseException:
+        try:
+            os.unlink(tmp)
+        except OSError:
+            pass
+        raise
+
+
 def schema_hash() -> str:
     """Hash of everything the serialized entries structurally depend on."""
     parts = (SCHEMA_VERSION,
@@ -206,18 +226,8 @@ class SimCache:
         entries.update(self._disk)               # unpromoted loaded rows
         for key, (latency, ledger) in self._store.items():
             entries[repr(key)] = (latency, ledger.as_tuple())
-        payload = json.dumps({"schema": schema_hash(), "entries": entries})
-        fd, tmp = tempfile.mkstemp(dir=target, prefix=".window_cache-")
-        try:
-            with os.fdopen(fd, "w") as fh:
-                fh.write(payload)
-            os.replace(tmp, path)
-        except BaseException:
-            try:
-                os.unlink(tmp)
-            except OSError:
-                pass
-            raise
+        atomic_write_text(
+            path, json.dumps({"schema": schema_hash(), "entries": entries}))
         if target == self._persist_dir:
             self._saved_size = len(self._store)
         return len(entries)

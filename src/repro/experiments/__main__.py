@@ -53,6 +53,9 @@ def main(argv: list[str] | None = None) -> int:
     ap.add_argument("--cache-dir", default=None, metavar="DIR",
                     help="persistent window-cache directory (default "
                          f"${simcache.CACHE_DIR_ENV} or results/.simcache)")
+    ap.add_argument("--plan-dir", default=None, metavar="DIR",
+                    help="ExecutionPlan store for --section plan (default "
+                         "$REPRO_PLAN_DIR or results/.plans)")
     ap.add_argument("--no-persist", action="store_true",
                     help="in-memory window cache only (no on-disk store)")
     args = ap.parse_args(argv)
@@ -83,6 +86,8 @@ def main(argv: list[str] | None = None) -> int:
         if args.jobs < 0:
             ap.error("--jobs must be >= 0 (0 = all cores)")
         overrides["jobs"] = default_jobs(args.jobs if args.jobs else None)
+    if args.plan_dir is not None:
+        overrides["plan_dir"] = args.plan_dir
     if overrides:
         sweep = dataclasses.replace(sweep, **overrides)
 

@@ -26,6 +26,30 @@ def _mapper_table(rows: list[dict]) -> str:
     return "\n".join([head, rule] + body)
 
 
+def _plan_table(rows: list[dict]) -> str:
+    head = ("| workload | phase | sites (distinct) | modes | psum lat_x | "
+            "mapper lat_x | hw | warm | sims |")
+    rule = "|---|---|---|---|---|---|---|---|---|"
+    body = []
+    for r in rows:
+        if "plan_error" in r:
+            # Keep the table well-formed: exception text may carry
+            # newlines/pipes (jax trace errors do).
+            from .sweeps import sanitize_error
+            msg = sanitize_error(r["plan_error"], "|")
+            body.append(f"| {r['workload']} | {r['phase']} | "
+                        f"ERROR: {msg} | | | | | | |")
+            continue
+        modes = ", ".join(f"{m}:{c}" for m, c in r["modes"].items())
+        body.append(
+            f"| {r['workload']} | {r['phase']} | {r['sites']} "
+            f"({r['distinct_sites']}) | {modes} | "
+            f"{r['psum_latency_x']:.3f} | {r['mapper_latency_x']:.3f} | "
+            f"{r['mapper_hardware']} | {'yes' if r['warm'] else 'no'} | "
+            f"{r['collective_engine_runs']} |")
+    return "\n".join([head, rule] + body)
+
+
 def _tables_table(rows: list[dict]) -> str:
     head = "| network | N | layer | P# | INA# |"
     rule = "|---|---|---|---|---|"
@@ -67,6 +91,15 @@ def summary_markdown(results: dict) -> str:
                   "baseline-dominating selection; see DESIGN.md S9). "
                   "Per-workload Pareto fronts and the winning "
                   "`NetworkSchedule`s are in `mapper.json`.", ""]
+    fig = results.get("plan")
+    if fig:
+        parts += [f"## plan — {fig['paper_reference']}", "",
+                  _plan_table(fig["rows"]), "",
+                  "`psum lat_x` = predicted whole-model accumulation gain "
+                  "of the planned strategies over all-eject/inject; "
+                  "`warm`/`sims` show store behaviour (a warm store plans "
+                  "with 0 collective simulations).  Full plans: "
+                  "`plan.json` + the store dir (see EXPERIMENTS.md).", ""]
     fig = results.get("tables")
     if fig:
         parts += [f"## Tables I & II — {fig['paper_reference']}", "",

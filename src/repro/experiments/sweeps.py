@@ -41,9 +41,12 @@ PAPER_REFERENCE = {
     "mesh_scaling": "beyond the paper: N x E scaling of the WS+INA gain",
     "mapper": "beyond the paper: searched mappings vs the fixed "
               "Eq. (1)-(4) placement (DESIGN.md S9)",
+    "plan": "beyond the paper: whole-model ExecutionPlans — NoC-costed "
+            "psum strategy, mapper verdict, pallas tiles per "
+            "(config, mesh, phase, dtype) (DESIGN.md S11)",
 }
 
-SECTIONS = ("tables", "fig7_9", "fig10_12", "mesh_scaling", "mapper")
+SECTIONS = ("tables", "fig7_9", "fig10_12", "mesh_scaling", "mapper", "plan")
 
 
 @dataclass(frozen=True)
@@ -60,6 +63,10 @@ class SweepConfig:
     mapper_space: str = "full"                  # "full" | "quick" MapperConfig
     mapper_transformers: tuple[str, ...] = ("llama3-8b", "qwen2-1.5b")
     mapper_tokens: int = 256                    # GEMM M tile per pass
+    # ---- plan section (DESIGN.md S11) ------------------------------------
+    plan_phases: tuple[str, ...] = ("train", "prefill", "decode")
+    plan_mesh: tuple[tuple[str, int], ...] = (("data", 16), ("model", 16))
+    plan_dir: Optional[str] = None              # None -> results/.plans
 
     def cfg(self, n: Optional[int] = None) -> NocConfig:
         return NocConfig() if n is None else NocConfig(n=n)
@@ -69,7 +76,7 @@ DEFAULT_SWEEP = SweepConfig()
 #: CI smoke shape: small windows, two E points, no N=16 mesh.
 QUICK_SWEEP = SweepConfig(e_list=(1, 4), n_list=(4, 8), sim_rounds=4,
                           workloads=("alexnet", "vgg16", "resnet50"),
-                          mapper_space="quick")
+                          mapper_space="quick", plan_phases=("decode",))
 
 
 def _imp_row(imp: Improvement, **extra) -> dict:
@@ -194,10 +201,73 @@ def run_mapper(sweep: SweepConfig = DEFAULT_SWEEP) -> dict:
             "rows": rows, "pareto": pareto, "best_schedules": schedules}
 
 
+def run_plan(sweep: SweepConfig = DEFAULT_SWEEP) -> dict:
+    """Plan section: one ExecutionPlan per (config, phase) on the
+    production mesh shape (DESIGN.md S11).
+
+    Plans are produced through the persistent :class:`repro.plan.PlanStore`
+    (``sweep.plan_dir``, default ``results/.plans``): a warm store answers
+    with **zero collective engine runs** — the per-row
+    ``collective_engine_runs`` delta is the evidence, and any failure
+    becomes an attributable ``plan_error`` row (CI fails on those).  The
+    returned dict embeds every plan verbatim, so ``plan.json`` is a
+    self-contained, diffable artifact.
+
+    The build is jax-trace-bound and plans ride the warm sim cache, so this
+    section does not fan out over ``sweep.jobs`` (forking after jax
+    initializes is not safe).
+    """
+    from repro.core.noc.collective.cost import COST_STATS
+    from repro.configs import ARCHS
+    from repro.plan import PlanStore
+
+    store = PlanStore(sweep.plan_dir)
+    rows, plans = [], {}
+    for arch, cfg in ARCHS.items():
+        for phase in sweep.plan_phases:
+            t0 = time.time()
+            runs0 = COST_STATS["engine_runs"]
+            try:
+                plan, built = store.get_or_build(
+                    cfg, sweep.plan_mesh, phase,
+                    mapper_space=sweep.mapper_space)
+            except Exception as e:               # noqa: BLE001
+                rows.append({"workload": arch, "phase": phase,
+                             "plan_error": f"{type(e).__name__}: {e}",
+                             "elapsed_us": (time.time() - t0) * 1e6})
+                continue
+            s = plan.psum_summary()
+            base_lat = sum(g.baseline_latency_cycles for g in plan.gemms)
+            best_lat = sum(g.latency_cycles for g in plan.gemms)
+            base_en = sum(g.baseline_energy_pj for g in plan.gemms)
+            best_en = sum(g.energy_pj for g in plan.gemms)
+            rows.append({
+                "workload": arch, "phase": phase, "key": plan.key,
+                "warm": not built,
+                "sites": s["sites"], "distinct_sites": s["distinct"],
+                "modes": s["modes"],
+                "psum_latency_x": s["latency_delta_x"],
+                "psum_energy_x": s["energy_delta_x"],
+                "mapper_latency_x": base_lat / best_lat if best_lat else 1.0,
+                "mapper_energy_x": base_en / best_en if best_en else 1.0,
+                "mapper_hardware": "x".join(map(str, plan.mapper_hardware))
+                if plan.mapper_hardware else "NA",
+                "tiles": len(plan.tiles),
+                "collective_engine_runs":
+                    COST_STATS["engine_runs"] - runs0,
+                "elapsed_us": (time.time() - t0) * 1e6,
+            })
+            plans[plan.key] = plan.to_dict()
+    return {"figure": "plan", "paper_reference": PAPER_REFERENCE["plan"],
+            "phases": list(sweep.plan_phases),
+            "mesh": [list(p) for p in sweep.plan_mesh],
+            "store": str(store.dir), "rows": rows, "plans": plans}
+
+
 _RUNNERS: dict[str, Callable[[SweepConfig], dict]] = {
     "tables": run_tables, "fig7_9": run_fig7_9,
     "fig10_12": run_fig10_12, "mesh_scaling": run_mesh_scaling,
-    "mapper": run_mapper,
+    "mapper": run_mapper, "plan": run_plan,
 }
 
 
@@ -248,6 +318,35 @@ def _mapper_csv(fig: dict) -> list[str]:
 
 def mapper_csv_lines(sweep: SweepConfig = DEFAULT_SWEEP) -> list[str]:
     return _mapper_csv(run_mapper(sweep))
+
+
+def sanitize_error(msg, escape: str = ",") -> str:
+    """One-line, metachar-free rendering of an exception message for CSV
+    rows and markdown tables (shared with ``report._plan_table``)."""
+    return " ".join(str(msg).split()).replace(escape, ";")[:160]
+
+
+def _plan_csv(fig: dict) -> list[str]:
+    """CSV rows for the plan section; failures keep the ``plan_error``
+    prefix CI greps for."""
+    lines = []
+    for r in fig["rows"]:
+        if "plan_error" in r:
+            msg = sanitize_error(r["plan_error"], ",")
+            lines.append(f"plan_error_{r['workload']}_{r['phase']},0,{msg}")
+            continue
+        modes = "+".join(f"{m}:{c}" for m, c in r["modes"].items())
+        lines.append(
+            f"plan_{r['workload']}_{r['phase']},{r['elapsed_us']:.0f},"
+            f"sites={r['sites']};modes={modes};"
+            f"psum_latency_x={r['psum_latency_x']:.3f};"
+            f"mapper_latency_x={r['mapper_latency_x']:.3f};"
+            f"warm={int(r['warm'])};sims={r['collective_engine_runs']}")
+    return lines
+
+
+def plan_csv_lines(sweep: SweepConfig = DEFAULT_SWEEP) -> list[str]:
+    return _plan_csv(run_plan(sweep))
 
 
 # --------------------------------------------------------------------------- #
@@ -304,5 +403,7 @@ def run_all(sweep: SweepConfig = DEFAULT_SWEEP,
                 csv += _fig_section_csv(section, results[section])
         if "mapper" in sections:
             csv += _mapper_csv(results["mapper"])
+        if "plan" in sections:
+            csv += _plan_csv(results["plan"])
         (out / "benchmarks.csv").write_text("\n".join(csv) + "\n")
     return results

@@ -38,7 +38,14 @@ def _kernel(x_ref, w_ref, o_ref, acc_ref, *, nk: int):
 @functools.partial(jax.jit, static_argnames=("bm", "bn", "bk", "interpret"))
 def ina_matmul(x: jax.Array, w: jax.Array, *, bm: int = 256, bn: int = 256,
                bk: int = 512, interpret: bool = False) -> jax.Array:
-    """[M, K] @ [K, N] with in-VMEM psum accumulation over K blocks."""
+    """[M, K] @ [K, N] with in-VMEM psum accumulation over K blocks.
+
+    The static defaults suit MXU-aligned shapes; planned per-shape blocks
+    (an :class:`repro.plan.ExecutionPlan`'s ``tile_for``) arrive as
+    ``bm``/``bn``/``bk`` via :func:`repro.kernels.ops.matmul`.  Blocks
+    must divide the problem dims exactly (the plan's chooser guarantees
+    this; hand-picked blocks are asserted below).
+    """
     m, k = x.shape
     k2, n = w.shape
     assert k == k2, (x.shape, w.shape)

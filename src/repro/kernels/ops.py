@@ -20,10 +20,18 @@ def _on_tpu() -> bool:
 
 
 def matmul(x: jax.Array, w: jax.Array, *, use_pallas: bool | None = None,
-           interpret: bool = False, **blocks) -> jax.Array:
+           interpret: bool = False, plan=None, **blocks) -> jax.Array:
+    """``plan`` (a :class:`repro.plan.ExecutionPlan`) supplies the pallas
+    block sizes for this problem shape when it planned one; explicit
+    ``blocks`` kwargs always win (the caller measured something)."""
     if use_pallas is None:
         use_pallas = _on_tpu()
     if use_pallas or interpret:
+        if plan is not None and not blocks:
+            tiles = plan.tile_for(x.shape[0], x.shape[1], w.shape[1],
+                                  str(x.dtype))
+            if tiles is not None:
+                blocks = dict(zip(("bm", "bn", "bk"), tiles))
         return ina_matmul(x, w, interpret=interpret or not _on_tpu(), **blocks)
     return ref.matmul_ref(x, w)
 

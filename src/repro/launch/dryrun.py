@@ -12,6 +12,11 @@ Usage:
   PYTHONPATH=src python -m repro.launch.dryrun --arch llama3-8b --shape train_4k
   PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod] [--psum-mode ina]
   PYTHONPATH=src python -m repro.launch.dryrun --all --out results/dryrun.json
+
+``--psum-mode auto`` plans through the persistent ExecutionPlan store
+(DESIGN.md S11): the first run builds and persists each cell's plan (plus
+its collective-simulation rows), the second run plans entirely from the
+warm store — 0 collective simulations, identical step artifacts.
 """
 import argparse
 import json
@@ -22,6 +27,7 @@ import traceback
 
 import jax
 
+from repro.compat import compiled_cost_analysis
 from repro.configs import ARCHS, SHAPES, shape_applicable
 from repro.launch.mesh import make_production_mesh
 from repro.models.api import get_model
@@ -88,7 +94,7 @@ def _lower_step(cfg, shape, mesh, pctx):
 def _cost_point(cfg, shape, mesh, pctx) -> dict:
     """flops/bytes/collective-bytes of one compiled (per-device) program."""
     compiled = _lower_step(cfg, shape, mesh, pctx).compile()
-    cost = compiled.cost_analysis()
+    cost = compiled_cost_analysis(compiled)
     coll = collective_bytes(compiled.as_text())
     return {"flops": cost.get("flops", 0.0),
             "bytes": cost.get("bytes accessed", 0.0),
@@ -129,11 +135,19 @@ def roofline_costs(cfg, shape, mesh, pctx, fast: bool = False) -> dict:
 
 
 def run_cell(arch: str, shape_name: str, mesh, psum_mode: str = "xla_spmd",
-             verbose: bool = True, roofline: bool = True) -> dict:
+             verbose: bool = True, roofline: bool = True,
+             plan_dir=None, use_plan: bool = True) -> dict:
     cfg = ARCHS[arch]
     shape = SHAPES[shape_name]
     model = get_model(cfg)
-    pctx = ParallelCtx(mesh=mesh, psum_mode=psum_mode)
+    # One plan per cell through the shared launch helper (same store keys
+    # as train/serve); ``info`` carries the warm-store evidence — a warm
+    # second dry-run plans every cell with 0 collective simulations.
+    from repro.plan import plan_for_launch
+    plan, plan_info = plan_for_launch(cfg, mesh, shape, psum_mode,
+                                      plan_dir=plan_dir, enabled=use_plan,
+                                      verbose=False)
+    pctx = ParallelCtx(mesh=mesh, psum_mode=psum_mode, plan=plan)
 
     t0 = time.time()
     lowered = _lower_step(cfg, shape, mesh, pctx)
@@ -144,7 +158,7 @@ def run_cell(arch: str, shape_name: str, mesh, psum_mode: str = "xla_spmd",
     t_compile = time.time() - t0
 
     mem = compiled.memory_analysis()
-    cost = compiled.cost_analysis()
+    cost = compiled_cost_analysis(compiled)
     hlo = compiled.as_text()
     coll = collective_bytes(hlo)
 
@@ -164,6 +178,8 @@ def run_cell(arch: str, shape_name: str, mesh, psum_mode: str = "xla_spmd",
             "peak_bytes": getattr(mem, "peak_memory_in_bytes", 0),
         },
     }
+    if plan_info is not None:
+        result["plan"] = plan_info
     if roofline:
         fast = cfg.family in ("ssm", "hybrid") and \
             shape.kind in ("train", "prefill")
@@ -172,6 +188,12 @@ def run_cell(arch: str, shape_name: str, mesh, psum_mode: str = "xla_spmd",
     if verbose:
         print(f"[dryrun] {arch} x {shape_name} x {n_dev}dev "
               f"({psum_mode}): lower {t_lower:.1f}s compile {t_compile:.1f}s")
+        if plan_info is not None:
+            src = "warm store" if plan_info["from_store"] else "built"
+            print(f"  plan: {plan_info['key']} ({src}, "
+                  f"{plan_info['collective_sims']} collective sims, "
+                  f"{plan_info['plan_s']}s) "
+                  f"modes={plan_info['psum']['modes']}")
         print(f"  memory: args={result['memory']['argument_bytes']:.3e} "
               f"temp={result['memory']['temp_bytes']:.3e} "
               f"peak={result['memory']['peak_bytes']:.3e}")
@@ -190,8 +212,11 @@ def main() -> int:
     ap.add_argument("--all", action="store_true")
     ap.add_argument("--multi-pod", action="store_true")
     ap.add_argument("--both-meshes", action="store_true")
+    from repro.core.collectives import CLI_PSUM_MODES
+    from repro.plan import add_plan_cli_args
     ap.add_argument("--psum-mode", default="xla_spmd",
-                    choices=["xla_spmd", "ina", "ina_ring", "eject_inject"])
+                    choices=CLI_PSUM_MODES)
+    add_plan_cli_args(ap)
     ap.add_argument("--no-roofline", action="store_true",
                     help="skip the unrolled costing compiles")
     ap.add_argument("--out", default=None)
@@ -243,7 +268,9 @@ def main() -> int:
             try:
                 multi = "pod" in mesh.axis_names
                 results.append(run_cell(arch, sname, mesh, args.psum_mode,
-                                        roofline=not (args.no_roofline or multi)))
+                                        roofline=not (args.no_roofline or multi),
+                                        plan_dir=args.plan_dir,
+                                        use_plan=not args.no_plan))
             except Exception as e:               # noqa: BLE001
                 traceback.print_exc()
                 failures.append({"arch": arch, "shape": sname,

@@ -20,9 +20,11 @@ import jax.numpy as jnp
 from repro.configs import ARCHS
 from repro.configs.base import ShapeConfig
 from repro.launch.mesh import make_host_mesh
+from repro.core.collectives import CLI_PSUM_MODES
 from repro.models.api import get_model
 from repro.parallel.steps import build_serve_step
 from repro.parallel.tp import ParallelCtx
+from repro.plan import add_plan_cli_args, plan_for_launch
 
 
 def main() -> None:
@@ -32,8 +34,8 @@ def main() -> None:
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--gen", type=int, default=16)
-    ap.add_argument("--psum-mode", default="ina",
-                    choices=["xla_spmd", "ina", "ina_ring", "eject_inject"])
+    ap.add_argument("--psum-mode", default="ina", choices=CLI_PSUM_MODES)
+    add_plan_cli_args(ap)
     ap.add_argument("--model-parallel", type=int, default=1)
     args = ap.parse_args()
 
@@ -42,10 +44,13 @@ def main() -> None:
         cfg = cfg.reduced()
     model = get_model(cfg)
     mesh = make_host_mesh(args.model_parallel)
-    pctx = ParallelCtx(mesh=mesh, psum_mode=args.psum_mode)
 
     max_seq = args.prompt_len + args.gen
     shape = ShapeConfig("cli", max_seq, args.batch, "decode")
+    plan, _ = plan_for_launch(cfg, mesh, shape, args.psum_mode,
+                              plan_dir=args.plan_dir,
+                              enabled=not args.no_plan)
+    pctx = ParallelCtx(mesh=mesh, psum_mode=args.psum_mode, plan=plan)
     ss = build_serve_step(model, mesh, shape, pctx, donate_cache=True)
 
     params = jax.device_put(model.init(jax.random.PRNGKey(0)),

@@ -24,8 +24,10 @@ from repro.data.pipeline import DataConfig, TokenPipeline
 from repro.launch.mesh import make_host_mesh, make_production_mesh
 from repro.models.api import get_model
 from repro.optim.adamw import adamw_init
+from repro.core.collectives import CLI_PSUM_MODES
 from repro.parallel.steps import build_train_step
 from repro.parallel.tp import ParallelCtx
+from repro.plan import add_plan_cli_args, plan_for_launch
 from repro.runtime.fault_tolerance import FTConfig, run_training
 
 
@@ -40,8 +42,8 @@ def main() -> None:
     ap.add_argument("--lr", type=float, default=3e-4)
     ap.add_argument("--ckpt-dir", default="/tmp/repro_ckpt")
     ap.add_argument("--ckpt-every", type=int, default=25)
-    ap.add_argument("--psum-mode", default="ina",
-                    choices=["xla_spmd", "ina", "ina_ring", "eject_inject"])
+    ap.add_argument("--psum-mode", default="ina", choices=CLI_PSUM_MODES)
+    add_plan_cli_args(ap)
     ap.add_argument("--model-parallel", type=int, default=1)
     ap.add_argument("--production-mesh", action="store_true",
                     help="16x16 mesh (requires 256 devices)")
@@ -54,8 +56,11 @@ def main() -> None:
 
     mesh = (make_production_mesh() if args.production_mesh
             else make_host_mesh(args.model_parallel))
-    pctx = ParallelCtx(mesh=mesh, psum_mode=args.psum_mode)
     shape = ShapeConfig("cli", args.seq, args.batch, "train")
+    plan, _ = plan_for_launch(cfg, mesh, shape, args.psum_mode,
+                              plan_dir=args.plan_dir,
+                              enabled=not args.no_plan)
+    pctx = ParallelCtx(mesh=mesh, psum_mode=args.psum_mode, plan=plan)
     ts = build_train_step(model, mesh, shape, pctx, base_lr=args.lr,
                           warmup=min(20, args.steps // 5 + 1),
                           total_steps=args.steps, donate=False)

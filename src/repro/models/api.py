@@ -54,6 +54,14 @@ class Model:
     def decode_step(self, params, batch, cache, pctx=None):
         return self.mod.decode_step(params, self.cfg, batch, cache, pctx)
 
+    def gemm_layers(self, tokens: int = 256):
+        """One decoder block's GEMMs (:func:`repro.core.ops.transformer_gemms`)
+        — the unit the plan builder's mapper search and pallas tile planning
+        operate on.  Whole-model totals scale linearly in depth, so
+        per-block verdicts are depth-invariant."""
+        from repro.core.ops import transformer_gemms
+        return transformer_gemms(self.cfg, tokens)
+
     # ------------------------------------------------------------------ #
     def input_specs(self, shape: ShapeConfig) -> dict:
         """ShapeDtypeStruct stand-ins for one (arch x shape) cell."""

@@ -150,7 +150,8 @@ def moe_mlp(p: dict, x: jax.Array, cfg: ModelConfig,
             partial = _expert_partial(xt, gi, po, ke, gv, wg, wu, wd,
                                       i * e_local, e_local, cap)
             return psum_with_mode(partial, pctx.axis, pctx.psum_mode,
-                                  scatter_axis=partial.ndim - 1).astype(dt_in)
+                                  scatter_axis=partial.ndim - 1,
+                                  plan=pctx.plan).astype(dt_in)
 
         rep2 = P(None, None)
         out_flat = shard_map(

@@ -4,6 +4,11 @@
 sharded, batch sharded over (pod, data).  ``build_serve_step``: one-token
 decode against a sharded KV cache.  Both return (jitted_fn, shardings) so
 the dry-run can ``.lower().compile()`` them with ShapeDtypeStructs only.
+
+Every builder accepts ``plan`` (a :class:`repro.plan.ExecutionPlan`): it is
+attached to the ``ParallelCtx`` the step traces under, so ``mode="auto"``
+psum sites read their precomputed strategy instead of re-consulting the NoC
+cost model per call site (DESIGN.md S11).
 """
 from __future__ import annotations
 
@@ -26,6 +31,19 @@ def _data_axes(mesh: Mesh):
     return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
 
 
+def _with_plan(pctx: Optional[ParallelCtx], mesh: Mesh,
+               plan) -> ParallelCtx:
+    """The step's ParallelCtx, carrying ``plan`` when one was supplied.
+
+    An explicit ``pctx.plan`` wins (the caller already decided); otherwise
+    the plan handle is attached so auto psum sites resolve through it.
+    """
+    pctx = pctx if pctx is not None else ParallelCtx(mesh=mesh)
+    if plan is not None and pctx.plan is None:
+        pctx = dataclasses.replace(pctx, plan=plan)
+    return pctx
+
+
 @dataclasses.dataclass
 class TrainStep:
     fn: object                    # jitted (params, opt, batch) -> ...
@@ -39,9 +57,9 @@ def build_train_step(model: Model, mesh: Mesh, shape: ShapeConfig,
                      pctx: Optional[ParallelCtx] = None,
                      base_lr: float = 3e-4, warmup: int = 200,
                      total_steps: int = 10_000,
-                     donate: bool = True) -> TrainStep:
+                     donate: bool = True, plan=None) -> TrainStep:
     cfg = model.cfg
-    pctx = pctx if pctx is not None else ParallelCtx(mesh=mesh)
+    pctx = _with_plan(pctx, mesh, plan)
     lr = cosine_schedule(base_lr, warmup, total_steps)
 
     # Shapes without allocation; sharding intents fitted to real dims.
@@ -91,9 +109,9 @@ class ServeStep:
 
 def build_serve_step(model: Model, mesh: Mesh, shape: ShapeConfig,
                      pctx: Optional[ParallelCtx] = None,
-                     donate_cache: bool = True) -> ServeStep:
+                     donate_cache: bool = True, plan=None) -> ServeStep:
     cfg = model.cfg
-    pctx = pctx if pctx is not None else ParallelCtx(mesh=mesh)
+    pctx = _with_plan(pctx, mesh, plan)
     baxes = _data_axes(mesh)
 
     pshapes = jax.eval_shape(model.init, jax.random.PRNGKey(0))
@@ -140,9 +158,9 @@ def build_serve_step(model: Model, mesh: Mesh, shape: ShapeConfig,
 
 
 def build_prefill(model: Model, mesh: Mesh, shape: ShapeConfig,
-                  pctx: Optional[ParallelCtx] = None):
+                  pctx: Optional[ParallelCtx] = None, plan=None):
     """Forward-only full-sequence pass (the prefill_32k cells)."""
-    pctx = pctx if pctx is not None else ParallelCtx(mesh=mesh)
+    pctx = _with_plan(pctx, mesh, plan)
     pshapes = jax.eval_shape(model.init, jax.random.PRNGKey(0))
     pspecs = fit_specs(param_specs(pshapes, mesh), pshapes, mesh)
     psh = jax.tree.map(lambda s: NamedSharding(mesh, s), pspecs,

@@ -12,10 +12,13 @@ accumulation strategy is selectable:
                             (the paper's algorithm, visible in HLO)
   * ``mode="eject_inject"`` — full-tensor relay ring with endpoint adds
                             (the paper's Fig. 4(a) baseline)
-  * ``mode="auto"``       — resolved per call site at trace time by the NoC
-                            collective cost model (simulated mesh latency of
-                            each strategy for this tensor size / axis span;
-                            see repro.core.noc.collective.cost)
+  * ``mode="auto"``       — resolved per call site: from the attached
+                            ``plan`` (a repro.plan.ExecutionPlan, decided
+                            once per (config, mesh, phase, dtype) and
+                            persisted) when one is carried, else at trace
+                            time by the NoC collective cost model (simulated
+                            mesh latency of each strategy for this tensor
+                            size / axis span; repro.core.noc.collective.cost)
   * ``mode="xla_spmd"``   — no shard_map at all: plain einsum, GSPMD chooses
 
 The shard_map regions are *partial*: only the ``model`` axis is manual; the
@@ -43,6 +46,9 @@ class ParallelCtx:
     psum_mode: str = "xla_spmd"   # xla_spmd | ina | ina_ring | eject_inject
                                   # | auto (NoC-simulated cost picks per site)
     axis: str = "model"
+    plan: Optional[object] = None  # repro.plan.ExecutionPlan: precomputed
+                                  # per-site strategies consulted by
+                                  # mode="auto" (None -> trace-time fallback)
     seq_shard: bool = True        # Megatron-style sequence-sharded activations
     rs_seq: bool = False          # row-parallel psum -> reduce-scatter(seq):
                                   # the INA output stays scattered (SP fusion)
@@ -102,7 +108,8 @@ def row_linear(x: jax.Array, w: jax.Array, pctx: Optional[ParallelCtx] = None,
                 from repro.core.collectives import reduce_scatter_with_mode
                 return reduce_scatter_with_mode(partial, pctx.axis,
                                                 pctx.psum_mode,
-                                                scatter_axis=1)
+                                                scatter_axis=1,
+                                                plan=pctx.plan)
         else:
             os_ = P(*([None] * nd))
 
@@ -110,7 +117,8 @@ def row_linear(x: jax.Array, w: jax.Array, pctx: Optional[ParallelCtx] = None,
                 partial = jnp.einsum("...f,fd->...d", xl,
                                      wl.astype(xl.dtype))
                 return psum_with_mode(partial, pctx.axis, pctx.psum_mode,
-                                      scatter_axis=partial.ndim - 1)
+                                      scatter_axis=partial.ndim - 1,
+                                      plan=pctx.plan)
 
         out = shard_map(local, mesh=pctx.mesh, in_specs=(xs, ws),
                         out_specs=os_, axis_names={pctx.axis},
@@ -137,7 +145,8 @@ def combine_experts(combine: jax.Array, expert_out: jax.Array,
     def local(cl, el):
         partial = jnp.einsum("bsec,ecd->bsd", cl, el.astype(cl.dtype))
         return psum_with_mode(partial, pctx.axis, pctx.psum_mode,
-                              scatter_axis=partial.ndim - 1)
+                              scatter_axis=partial.ndim - 1,
+                              plan=pctx.plan)
 
     return shard_map(
         local, mesh=pctx.mesh,

@@ -1,0 +1,34 @@
+"""ExecutionPlan layer: one planning pass for the whole jax execution half.
+
+This package inverts the control flow of the runtime (DESIGN.md S11):
+instead of every ``psum_with_mode(mode="auto")`` call site consulting the
+NoC cost model mid-trace, the mapper's verdicts dying in a report, and
+pallas tiles being hardcoded, a single pass per (model config, mesh shape,
+phase, dtype) — :func:`~.builder.build_plan` — decides all three and emits
+a frozen, byte-deterministic, persistable :class:`~.plan.ExecutionPlan`.
+Consumers (``ParallelCtx``, ``core.collectives``, ``kernels.ina_matmul``)
+*read* the plan; the old trace-time path survives as the planless
+fallback.
+
+Produce/persist: :class:`~.store.PlanStore` (``results/.plans``).
+Inspect: ``python -m repro.experiments --section plan`` (EXPERIMENTS.md).
+"""
+from .builder import (PHASES, PHASE_SHAPES, build_plan, collect_psum_sites,
+                      gemm_verdicts, normalize_mesh, phase_shape,
+                      resolve_sites, tile_choices, trace_mesh)
+from .plan import (ExecutionPlan, GemmVerdict, PLAN_SCHEMA_VERSION,
+                   PsumDecision, TileChoice, plan_key, plan_schema_hash)
+from .store import (PLAN_DIR_ENV, PlanStore, add_plan_cli_args,
+                    default_plan_dir, launch_phase, plan_for_launch)
+from .tiles import choose_tiles
+
+__all__ = [
+    "ExecutionPlan", "PsumDecision", "GemmVerdict", "TileChoice",
+    "PLAN_SCHEMA_VERSION", "plan_key", "plan_schema_hash",
+    "PHASES", "PHASE_SHAPES", "build_plan", "collect_psum_sites",
+    "gemm_verdicts", "normalize_mesh", "phase_shape", "resolve_sites",
+    "tile_choices", "trace_mesh",
+    "PlanStore", "PLAN_DIR_ENV", "add_plan_cli_args", "default_plan_dir",
+    "launch_phase", "plan_for_launch",
+    "choose_tiles",
+]

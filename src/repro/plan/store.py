@@ -1,0 +1,193 @@
+"""Versioned on-disk plan store: repeated launches start warm.
+
+Plans persist as one JSON file per plan key under ``results/.plans``
+(sibling of the PR-4 ``results/.simcache`` window store; override with
+``$REPRO_PLAN_DIR`` or an explicit directory).  The contract mirrors the
+window store's:
+
+* **schema-guarded** — every file carries :func:`~.plan.plan_schema_hash`;
+  a mismatch (field drift, cost-model surface change, window-store schema
+  bump) makes the file invisible (rebuild) instead of serving stale
+  decisions;
+* **atomic** — writes go through tempfile + ``os.replace``, so concurrent
+  launches never observe a torn plan;
+* **best-effort** — a missing/corrupt file is a cold start, never an
+  error.
+
+:meth:`PlanStore.get_or_build` is the one call consumers use: load when
+warm (zero collective simulations — the acceptance criterion of this
+layer), build + save when cold.
+"""
+from __future__ import annotations
+
+import json
+import os
+from pathlib import Path
+from typing import Optional
+
+from repro.configs.base import ModelConfig
+
+from .plan import ExecutionPlan, plan_key, plan_schema_hash
+
+#: Environment override for the store location (CLI flags take precedence).
+PLAN_DIR_ENV = "REPRO_PLAN_DIR"
+
+_DEFAULT_DIR = os.path.join("results", ".plans")
+
+
+def default_plan_dir() -> str:
+    """The store location honoring the environment override."""
+    return os.environ.get(PLAN_DIR_ENV, _DEFAULT_DIR)
+
+
+def add_plan_cli_args(ap) -> None:
+    """The ``--psum-mode auto`` companion flags, shared by the launch CLIs
+    (train/serve/dryrun) so the surface cannot drift between them."""
+    ap.add_argument("--plan-dir", default=None, metavar="DIR",
+                    help="ExecutionPlan store consulted by --psum-mode auto "
+                         f"(default ${PLAN_DIR_ENV} or {_DEFAULT_DIR})")
+    ap.add_argument("--no-plan", action="store_true",
+                    help="auto mode without plans (per-site trace-time "
+                         "resolution, the pre-plan behaviour)")
+
+
+def launch_phase(shape) -> str:
+    """Plan-phase label for a launch ShapeConfig.
+
+    The canonical phase shapes (train_4k / prefill_32k / decode_32k) share
+    the bare phase name, so dry-run cells and train/serve launches reuse
+    each other's plans; any other shape keys by its full geometry — two
+    CLI launches with different ``--batch``/``--seq`` must not collide on
+    one plan file (the psum payloads differ).
+    """
+    from .builder import PHASE_SHAPES
+    if PHASE_SHAPES.get(shape.kind) == shape.name:
+        return shape.kind
+    return (f"{shape.kind}-{shape.name}-"
+            f"{shape.seq_len}x{shape.global_batch}")
+
+
+def plan_for_launch(cfg: ModelConfig, mesh, shape, psum_mode: str,
+                    plan_dir: Optional[str] = None, enabled: bool = True,
+                    verbose: bool = True, **build_kwargs):
+    """(plan, info) an ``--psum-mode auto`` launch should carry — or
+    ``(None, None)`` when planning is off.
+
+    Shared by the train/serve/dry-run drivers: persists the window cache
+    (so cold plan builds warm the *next* launch), keys the plan via
+    :func:`launch_phase`, and prints one status line.  ``info`` records
+    the store behaviour (``from_store``, ``collective_sims``, timing) —
+    the warm-store evidence the dry-run reports.
+    """
+    if psum_mode != "auto" or not enabled:
+        return None, None
+    import time
+
+    from repro.core.noc.collective.cost import COST_STATS
+    from repro.core.noc.simcache import SIM_CACHE
+    if SIM_CACHE._persist_dir is None:
+        # First launch-plan of the process wires persistence; re-calls
+        # would re-parse the whole on-disk store per cell and retarget a
+        # caller-configured cache dir.
+        SIM_CACHE.persist(SIM_CACHE.persist_default_dir())
+    store = PlanStore(plan_dir)
+    runs0 = COST_STATS["engine_runs"]
+    t0 = time.time()
+    plan, built = store.get_or_build(cfg, mesh, launch_phase(shape),
+                                     shape=shape, **build_kwargs)
+    info = {"key": plan.key, "from_store": not built,
+            "plan_s": round(time.time() - t0, 2),
+            "collective_sims": COST_STATS["engine_runs"] - runs0,
+            "psum": plan.psum_summary()}
+    if verbose:
+        src = "warm store" if info["from_store"] else "built"
+        print(f"[plan] {plan.key}: {src} "
+              f"({info['collective_sims']} collective sims) "
+              f"modes={info['psum']['modes']}")
+    return plan, info
+
+
+class PlanStore:
+    """Directory of schema-guarded ``ExecutionPlan`` JSON files."""
+
+    def __init__(self, dir_path: Optional[str | Path] = None) -> None:
+        self.dir = Path(dir_path) if dir_path is not None \
+            else Path(default_plan_dir())
+        self.loads = 0
+        self.builds = 0
+
+    def path_for(self, key: str) -> Path:
+        return self.dir / f"{key}.json"
+
+    def load(self, key: str) -> Optional[ExecutionPlan]:
+        """The stored plan for ``key``, or None (missing/corrupt/stale)."""
+        try:
+            doc = json.loads(self.path_for(key).read_text())
+        except (OSError, ValueError):
+            return None
+        if doc.get("schema") != plan_schema_hash():
+            return None
+        try:
+            plan = ExecutionPlan.from_dict(doc)
+        except (KeyError, TypeError, ValueError):
+            return None
+        self.loads += 1
+        return plan
+
+    def save(self, plan: ExecutionPlan) -> Path:
+        """Atomically write ``plan``; returns the stored path."""
+        from repro.core.noc.simcache import atomic_write_text
+        self.dir.mkdir(parents=True, exist_ok=True)
+        path = self.path_for(plan.key)
+        atomic_write_text(path, plan.to_json())
+        return path
+
+    @staticmethod
+    def _compatible(plan: ExecutionPlan, cfg: ModelConfig,
+                    build_kwargs: dict) -> bool:
+        """Was the stored plan built from this config, the way the caller
+        is asking to build?
+
+        The plan key deliberately covers only (model, mesh, phase, dtype);
+        the config *content* (a registry edit keeps the name) and build
+        parameters that change plan content — objective, mapper space,
+        explicit token tile, gemm search on/off, a non-default NocConfig —
+        are recorded in the plan and checked here, so a stale store can
+        never silently answer a mismatched request: mismatch = cold =
+        rebuild.
+        """
+        from repro.core.noc import NocConfig
+
+        from .plan import config_digest
+        if plan.config != config_digest(cfg):
+            return False
+        checks = {"objective": plan.objective, "tokens": plan.tokens}
+        if build_kwargs.get("gemm_search", True):
+            if not plan.gemms:
+                return False
+            checks["mapper_space"] = plan.mapper_space
+        for key, have in checks.items():
+            # None means "use the builder's derived default" (tokens=None
+            # is documented API) — don't-care, matches whatever is stored.
+            req = build_kwargs.get(key)
+            if req is not None and req != have:
+                return False
+        noc = repr(build_kwargs.get("noc_cfg") or NocConfig())
+        return plan.noc == noc
+
+    def get_or_build(self, cfg: ModelConfig, mesh_shape, phase: str,
+                     **build_kwargs) -> tuple[ExecutionPlan, bool]:
+        """(plan, built): load when warm, :func:`~.builder.build_plan` +
+        save when cold.  ``build_kwargs`` forward to the builder; a stored
+        plan built under different parameters (see :meth:`_compatible`)
+        counts as cold and is rebuilt in place."""
+        from .builder import build_plan, normalize_mesh
+        key = plan_key(cfg.name, normalize_mesh(mesh_shape), phase,
+                       str(cfg.dtype))
+        plan = self.load(key)
+        if plan is not None and self._compatible(plan, cfg, build_kwargs):
+            return plan, False
+        plan = build_plan(cfg, mesh_shape, phase, **build_kwargs)
+        self.save(plan)
+        self.builds += 1
+        return plan, True

@@ -1,0 +1,90 @@
+"""Pallas tile planning for the INA matmul kernel.
+
+``kernels/ina_matmul.py`` historically hardcoded ``bm=bn=256, bk=512`` —
+fine for the shapes its tests exercise, wrong (or outright failing the
+divisibility assert) for the GEMM shapes real configs produce.  This module
+turns the block choice into a planned decision with the TPU constraints
+from the accelerator guide baked in:
+
+* the MXU is a 128x128 systolic array and the lane dimension is always
+  128, so blocks prefer multiples of 128 (falling back to the dtype's
+  minimal sublane tile when a dimension is narrower or indivisible);
+* x/w/acc blocks must fit VMEM (~16 MB/core) with headroom for the
+  pipeline's double buffering, so ``bk`` shrinks first (the accumulator
+  stays resident across the K grid — shrinking ``bm``/``bn`` would shrink
+  the flushed tile instead).
+
+Pure arithmetic — deterministic, no simulation — so tile planning adds
+nothing to plan build time.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+#: Per-core VMEM budget for one grid step's working set.  Half of the
+#: ~16 MB VMEM: the pipeline double-buffers the streamed x/w blocks.
+VMEM_BUDGET_BYTES = 8 * 1024 * 1024
+
+#: Minimal second-to-last-dim tile per dtype (sublane granularity).
+_MIN_SUBLANE = {"float32": 8, "bfloat16": 16, "float16": 16,
+                "int8": 32, "float8_e4m3fn": 32, "float8_e5m2": 32}
+
+#: Upper bounds matching the kernel's historical defaults.
+_TARGET_M = 256
+_TARGET_N = 256
+_TARGET_K = 512
+
+
+def tile_policy_signature() -> tuple:
+    """Everything a planned tile choice depends on besides the GEMM shape.
+
+    Part of ``plan_schema_hash()``: changing any of these constants must
+    invalidate persisted plans (stale tiles would otherwise be served
+    warm)."""
+    return (VMEM_BUDGET_BYTES, _TARGET_M, _TARGET_N, _TARGET_K,
+            tuple(sorted(_MIN_SUBLANE.items())))
+
+
+def _block(dim: int, target: int, align: int) -> int:
+    """Largest divisor of ``dim`` that is <= ``target``.
+
+    Prefers multiples of ``align`` (the MXU/lane granularity); when no
+    aligned divisor exists (narrow or odd dims) the largest plain divisor
+    wins — the kernel requires exact divisibility, alignment is advisory.
+    """
+    cap = min(target, dim)
+    fallback = 1
+    for b in range(cap, 0, -1):
+        if dim % b:
+            continue
+        if b % align == 0:
+            return b
+        if fallback == 1:
+            fallback = b
+    return fallback
+
+
+def choose_tiles(m: int, k: int, n: int, dtype: str = "bfloat16",
+                 vmem_budget: int = VMEM_BUDGET_BYTES,
+                 ) -> tuple[int, int, int]:
+    """(bm, bn, bk) for ``[m, k] @ [k, n]`` under the kernel's constraints.
+
+    Every returned block divides its dimension exactly (the kernel asserts
+    this), targets the historical 256/256/512 ceilings, and fits the VMEM
+    budget: ``bm*bk + bk*bn`` input bytes (double-buffered) plus the
+    ``bm*bn`` f32 accumulator and output tile.
+    """
+    itemsize = jnp.dtype(dtype).itemsize
+    sublane = _MIN_SUBLANE.get(str(dtype), 8)
+    bm = _block(m, _TARGET_M, 128 if m >= 128 else sublane)
+    bn = _block(n, _TARGET_N, 128)
+    bk = _block(k, _TARGET_K, 128)
+
+    def working_set(bk_: int) -> int:
+        stream = (bm * bk_ + bk_ * bn) * itemsize * 2   # double-buffered
+        resident = bm * bn * 4 + bm * bn * itemsize     # acc + out tile
+        return stream + resident
+
+    while working_set(bk) > vmem_budget and bk > 1:
+        bk = _block(k, bk // 2, 128 if bk > 128 else 1)
+    return bm, bn, bk
