@@ -1,0 +1,109 @@
+"""Serving subsystem: engine throughput, cluster-sim event rate, warm plans.
+
+``run()`` produces three evidence groups for the BENCH trajectory:
+
+* ``serve_engine`` — a reduced-config :class:`repro.serve.ServingEngine`
+  executes a seeded workload end-to-end (continuous batching + paged KV +
+  paged==monolithic checks): requests/s and tokens/s of the real jax path;
+* ``serve_cluster`` — the request-level cluster simulator on a synthetic
+  cost model: simulated events/s over a four-instance fleet;
+* ``serve_plans_cold`` / ``serve_plans_warm`` — per-phase serving plans
+  built twice through a throwaway :class:`repro.plan.PlanStore`: the warm
+  pass must answer from the store with **zero** collective engine runs
+  (the DESIGN.md S12 acceptance evidence — violations raise, which
+  ``benchmarks/run.py`` turns into a ``serve_error`` row + nonzero exit).
+
+Returns ``(csv lines, perf dict)``; ``benchmarks/run.py --sections serve``
+lands the perf dict in the ``BENCH_<n>.json`` snapshot.
+"""
+import shutil
+import tempfile
+import time
+
+_ARCH = "qwen2-1.5b"
+
+
+def _engine_perf(quick: bool) -> dict:
+    from repro.configs import ARCHS
+    from repro.serve import ServingEngine, make_workload
+
+    cfg = ARCHS[_ARCH].reduced()
+    n = 4 if quick else 8
+    reqs = make_workload(n, qps=0.0, prompt_dist="uniform:4:12",
+                         gen_dist="uniform:2:6", seed=0, vocab=cfg.vocab,
+                         prefix="b")
+    eng = ServingEngine(cfg, slots=2, max_seq=cfg.max_seq, block_size=8,
+                        prefill_chunk=4, check=True)
+    t0 = time.time()
+    report = eng.run(reqs)
+    wall = time.time() - t0
+    tokens = sum(len(r["tokens"]) for r in report.requests)
+    return {"arch": f"{_ARCH} (reduced)", "requests": n, "tokens": tokens,
+            "iterations": report.iterations, "checks": report.checks,
+            "wall_s": wall, "requests_per_s": n / wall,
+            "tok_per_s": tokens / wall}
+
+
+def _cluster_perf(quick: bool) -> dict:
+    from repro.serve import ClusterSimulator, SyntheticCostModel, make_workload
+
+    n = 250 if quick else 1000
+    reqs = make_workload(n, qps=5.0, prompt_dist="lognormal:128:0.5:512",
+                         gen_dist="uniform:32:128", seed=0)
+    sim = ClusterSimulator(4, slots=8, block_size=16, max_seq=1024,
+                           prefill_chunk=64, cost=SyntheticCostModel())
+    t0 = time.time()
+    m = sim.run(reqs)
+    wall = time.time() - t0
+    return {"requests": n, "fleet": 4, "events": m["events"],
+            "iterations": m["iterations"], "wall_s": wall,
+            "events_per_s": m["events"] / wall,
+            "p99_e2e_s": m["e2e_s"]["p99"]}
+
+
+def _plans_perf() -> dict:
+    from repro.configs import ARCHS
+    from repro.serve import serve_plans
+
+    tmp = tempfile.mkdtemp(prefix="bench_serve_")
+    try:
+        def sweep() -> tuple[float, int, int]:
+            t0 = time.time()
+            plans = serve_plans(ARCHS[_ARCH], (("data", 16), ("model", 16)),
+                                plan_dir=tmp, verbose=False)
+            sims = sum(info["collective_sims"] for _, info in plans.values())
+            stored = sum(info["from_store"] for _, info in plans.values())
+            return time.time() - t0, sims, stored
+
+        cold_s, cold_sims, cold_stored = sweep()
+        warm_s, warm_sims, warm_stored = sweep()
+    finally:
+        shutil.rmtree(tmp, ignore_errors=True)
+    assert cold_stored == 0, f"cold store answered {cold_stored} plans"
+    assert warm_stored == 2 and warm_sims == 0, \
+        f"warm store not warm: {warm_stored} from store, {warm_sims} sims"
+    return {"arch": _ARCH, "phases": ["prefill", "decode"],
+            "cold_s": cold_s, "warm_s": warm_s,
+            "speedup_x": cold_s / max(warm_s, 1e-9),
+            "collective_sims_cold": cold_sims,
+            "collective_sims_warm": warm_sims}
+
+
+def run(quick: bool = False) -> tuple[list[str], dict]:
+    eng = _engine_perf(quick)
+    clu = _cluster_perf(quick)
+    pl = _plans_perf()
+    perf = {"engine": eng, "cluster": clu, "plans": pl}
+    lines = [
+        f"serve_engine,{eng['wall_s'] * 1e6 / eng['requests']:.0f},"
+        f"requests={eng['requests']};tok_s={eng['tok_per_s']:.1f};"
+        f"iters={eng['iterations']};checks={eng['checks']}",
+        f"serve_cluster,{clu['wall_s'] * 1e6 / max(clu['events'], 1):.2f},"
+        f"events={clu['events']};events_per_s={clu['events_per_s']:.0f};"
+        f"requests={clu['requests']};fleet={clu['fleet']}",
+        f"serve_plans_cold,{pl['cold_s'] * 1e6 / 2:.0f},"
+        f"plans=2;sims={pl['collective_sims_cold']}",
+        f"serve_plans_warm,{pl['warm_s'] * 1e6 / 2:.0f},"
+        f"plans=2;sims=0;speedup_x={pl['speedup_x']:.1f}",
+    ]
+    return lines, perf

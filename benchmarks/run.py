@@ -73,6 +73,13 @@ def _plan(args):
     return lines
 
 
+def _serve(args):
+    from benchmarks import bench_serve
+    lines, perf = bench_serve.run(quick=args.quick)
+    _PERF["serve"] = perf
+    return lines
+
+
 def _roofline(args):
     if not os.path.exists("results/dryrun_singlepod.json"):
         return ["roofline_skipped,0,run_launch/dryrun_first"]
@@ -89,6 +96,7 @@ SECTIONS = {
     "mapper": _mapper,
     "mapper_full": _mapper_full,
     "plan": _plan,
+    "serve": _serve,
     "roofline": _roofline,
 }
 

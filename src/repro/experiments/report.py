@@ -50,6 +50,38 @@ def _plan_table(rows: list[dict]) -> str:
     return "\n".join([head, rule] + body)
 
 
+def _serve_table(fig: dict) -> str:
+    head = ("| workload | semantics | qps | fleet | p99 queueing (s) | "
+            "p99 ttft (s) | tok/s | SLO |")
+    rule = "|---|---|---|---|---|---|---|---|"
+    body = []
+    for r in fig["rows"]:
+        if "serve_error" in r:
+            from .sweeps import sanitize_error
+            msg = sanitize_error(r["serve_error"], "|")
+            body.append(f"| {r['workload']} | {r.get('semantics', '')} | "
+                        f"{r.get('qps', '')} | {r.get('fleet', '')} | "
+                        f"ERROR: {msg} | | | |")
+            continue
+        body.append(
+            f"| {r['workload']} | {r['semantics']} | {r['qps']:g} | "
+            f"{r['fleet']} | {r['p99_queueing_ms'] / 1e3:.2f} | "
+            f"{r['p99_ttft_ms'] / 1e3:.2f} | {r['throughput_tok_s']:.1f} | "
+            f"{'met' if r['slo_met'] else 'miss'} |")
+    lines = [head, rule] + body
+    answers = fig.get("answers") or []
+    if answers:
+        lines += ["", f"**Fleet sizing (p99 {fig['slo_metric']} <= "
+                      f"{fig['slo_ms'] / 1e3:g} s modeled):**"]
+        for a in answers:
+            fleet = (f"{a['fleet_needed']} instance(s)"
+                     if a["fleet_needed"] is not None
+                     else "not met at swept sizes")
+            lines.append(f"- {a['workload']} @ {a['qps']:g} qps "
+                         f"[{a['semantics']}]: {fleet}")
+    return "\n".join(lines)
+
+
 def _tables_table(rows: list[dict]) -> str:
     head = "| network | N | layer | P# | INA# |"
     rule = "|---|---|---|---|---|"
@@ -100,6 +132,15 @@ def summary_markdown(results: dict) -> str:
                   "`warm`/`sims` show store behaviour (a warm store plans "
                   "with 0 collective simulations).  Full plans: "
                   "`plan.json` + the store dir (see EXPERIMENTS.md).", ""]
+    fig = results.get("serve")
+    if fig:
+        parts += [f"## serve — {fig['paper_reference']}", "",
+                  _serve_table(fig), "",
+                  "Both semantics price the *same* per-phase ExecutionPlan; "
+                  "`ina` uses planned collective latencies, `eject_inject` "
+                  "the software-baseline ones, so a smaller fleet under "
+                  "`ina` is the in-network-accumulation advantage stated "
+                  "as capacity (see DESIGN.md S12).", ""]
     fig = results.get("tables")
     if fig:
         parts += [f"## Tables I & II — {fig['paper_reference']}", "",

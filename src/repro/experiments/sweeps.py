@@ -44,9 +44,12 @@ PAPER_REFERENCE = {
     "plan": "beyond the paper: whole-model ExecutionPlans — NoC-costed "
             "psum strategy, mapper verdict, pallas tiles per "
             "(config, mesh, phase, dtype) (DESIGN.md S11)",
+    "serve": "beyond the paper: request-level serving capacity — the INA "
+             "advantage as meshes-per-SLO (DESIGN.md S12)",
 }
 
-SECTIONS = ("tables", "fig7_9", "fig10_12", "mesh_scaling", "mapper", "plan")
+SECTIONS = ("tables", "fig7_9", "fig10_12", "mesh_scaling", "mapper", "plan",
+            "serve")
 
 
 @dataclass(frozen=True)
@@ -67,6 +70,25 @@ class SweepConfig:
     plan_phases: tuple[str, ...] = ("train", "prefill", "decode")
     plan_mesh: tuple[tuple[str, int], ...] = (("data", 16), ("model", 16))
     plan_dir: Optional[str] = None              # None -> results/.plans
+    # ---- serve section (DESIGN.md S12) -----------------------------------
+    serve_archs: tuple[str, ...] = ("qwen2-1.5b", "llama3-8b",
+                                    "deepseek-v2-lite-16b")
+    serve_qps: tuple[float, ...] = (0.05, 0.1, 0.2)
+    serve_fleets: tuple[int, ...] = (1, 2, 4, 8, 16)
+    serve_requests: int = 200
+    serve_seed: int = 0
+    # The fleet answer is on p99 admission-queueing delay: the modeled
+    # 1 GHz mesh is prefill-bound, so absolute TTFT/e2e floors differ per
+    # collective semantics at *any* fleet size — queueing is the metric
+    # fleet size actually buys down, and both semantics can meet it.
+    serve_slo_metric: str = "queueing_s"
+    serve_slo_ms: float = 30_000.0              # 30 s modeled queueing p99
+    serve_slots: int = 8
+    serve_max_seq: int = 1024
+    serve_block: int = 16
+    serve_chunk: int = 64                       # prefill chunk (tokens)
+    serve_prompt_dist: str = "lognormal:128:0.5:512"
+    serve_gen_dist: str = "uniform:32:128"
 
     def cfg(self, n: Optional[int] = None) -> NocConfig:
         return NocConfig() if n is None else NocConfig(n=n)
@@ -76,7 +98,9 @@ DEFAULT_SWEEP = SweepConfig()
 #: CI smoke shape: small windows, two E points, no N=16 mesh.
 QUICK_SWEEP = SweepConfig(e_list=(1, 4), n_list=(4, 8), sim_rounds=4,
                           workloads=("alexnet", "vgg16", "resnet50"),
-                          mapper_space="quick", plan_phases=("decode",))
+                          mapper_space="quick", plan_phases=("decode",),
+                          serve_archs=("qwen2-1.5b",), serve_qps=(0.1,),
+                          serve_fleets=(1, 2), serve_requests=60)
 
 
 def _imp_row(imp: Improvement, **extra) -> dict:
@@ -264,10 +288,100 @@ def run_plan(sweep: SweepConfig = DEFAULT_SWEEP) -> dict:
             "store": str(store.dir), "rows": rows, "plans": plans}
 
 
+def run_serve(sweep: SweepConfig = DEFAULT_SWEEP) -> dict:
+    """Serve section: qps x fleet x collective-semantics capacity sweep
+    (DESIGN.md S12).
+
+    For each arch in ``sweep.serve_archs``, builds the per-phase serving
+    plans once (warm :class:`~repro.plan.PlanStore`), then prices the same
+    plan under both collective semantics — ``ina`` (in-network
+    accumulation) and ``eject_inject`` (the software baseline) — and runs
+    the request-level cluster simulator over every (qps, fleet) point.
+    The headline per (arch, qps, semantics) is the smallest fleet meeting
+    the ``sweep.serve_slo_metric`` p99 SLO (default: admission-queueing
+    delay — the latency component fleet size actually buys down on the
+    prefill-bound modeled mesh), so the INA advantage reads directly as
+    *fewer meshes per SLO*.  Failures become attributable ``serve_error``
+    rows (CI fails on those); everything is seeded, so rows are
+    deterministic.
+    """
+    from repro.configs import ARCHS
+    from repro.serve.cluster import ClusterSimulator
+    from repro.serve.costs import PlanCostModel, SEMANTICS, serve_plans
+    from repro.serve.traffic import make_workload
+
+    slo_s = sweep.serve_slo_ms / 1e3
+    rows, answers = [], []
+    for arch in sweep.serve_archs:
+        cfg = ARCHS[arch]
+        t0 = time.time()
+        try:
+            plans = serve_plans(cfg, sweep.plan_mesh,
+                                plan_dir=sweep.plan_dir, verbose=False)
+        except Exception as e:                   # noqa: BLE001
+            rows.append({"workload": arch,
+                         "serve_error": f"{type(e).__name__}: {e}",
+                         "elapsed_us": (time.time() - t0) * 1e6})
+            continue
+        plan_sims = sum(info["collective_sims"]
+                        for _, info in plans.values())
+        for sem in SEMANTICS:
+            cost = PlanCostModel.from_plans(
+                cfg, plans["prefill"][0], plans["decode"][0],
+                prefill_chunk=sweep.serve_chunk, semantics=sem)
+            for qps in sweep.serve_qps:
+                reqs = make_workload(sweep.serve_requests, qps,
+                                     sweep.serve_prompt_dist,
+                                     sweep.serve_gen_dist, sweep.serve_seed)
+                fleet_needed = None
+                for fleet in sweep.serve_fleets:
+                    t1 = time.time()
+                    try:
+                        m = ClusterSimulator(
+                            fleet, slots=sweep.serve_slots,
+                            block_size=sweep.serve_block,
+                            max_seq=sweep.serve_max_seq,
+                            prefill_chunk=sweep.serve_chunk,
+                            cost=cost).run(reqs)
+                    except Exception as e:       # noqa: BLE001
+                        rows.append({
+                            "workload": arch, "semantics": sem, "qps": qps,
+                            "fleet": fleet,
+                            "serve_error": f"{type(e).__name__}: {e}",
+                            "elapsed_us": (time.time() - t1) * 1e6})
+                        continue
+                    p99 = m[sweep.serve_slo_metric]["p99"]
+                    met = p99 <= slo_s
+                    if met and fleet_needed is None:
+                        fleet_needed = fleet
+                    rows.append({
+                        "workload": arch, "semantics": sem, "qps": qps,
+                        "fleet": fleet,
+                        "p99_slo_ms": p99 * 1e3,
+                        "p99_queueing_ms": m["queueing_s"]["p99"] * 1e3,
+                        "p99_ttft_ms": m["ttft_s"]["p99"] * 1e3,
+                        "p99_e2e_ms": m["e2e_s"]["p99"] * 1e3,
+                        "throughput_rps": m["throughput_rps"],
+                        "throughput_tok_s": m["throughput_tok_s"],
+                        "littles_law_ratio": m["littles_law_ratio"],
+                        "slo_met": met,
+                        "plan_sims": plan_sims,
+                        "elapsed_us": (time.time() - t1) * 1e6,
+                    })
+                answers.append({"workload": arch, "semantics": sem,
+                                "qps": qps, "fleet_needed": fleet_needed})
+    return {"figure": "serve", "paper_reference": PAPER_REFERENCE["serve"],
+            "slo_metric": sweep.serve_slo_metric,
+            "slo_ms": sweep.serve_slo_ms,
+            "mesh": [list(p) for p in sweep.plan_mesh],
+            "requests": sweep.serve_requests, "seed": sweep.serve_seed,
+            "rows": rows, "answers": answers}
+
+
 _RUNNERS: dict[str, Callable[[SweepConfig], dict]] = {
     "tables": run_tables, "fig7_9": run_fig7_9,
     "fig10_12": run_fig10_12, "mesh_scaling": run_mesh_scaling,
-    "mapper": run_mapper, "plan": run_plan,
+    "mapper": run_mapper, "plan": run_plan, "serve": run_serve,
 }
 
 
@@ -349,6 +463,37 @@ def plan_csv_lines(sweep: SweepConfig = DEFAULT_SWEEP) -> list[str]:
     return _plan_csv(run_plan(sweep))
 
 
+def _serve_csv(fig: dict) -> list[str]:
+    """CSV rows for the serve section; failures keep the ``serve_error``
+    prefix CI greps for, and per-(arch, qps, semantics) answer rows carry
+    the fleet-sizing headline."""
+    lines = []
+    for r in fig["rows"]:
+        if "serve_error" in r:
+            msg = sanitize_error(r["serve_error"], ",")
+            tag = "_".join(str(r[k]) for k in ("workload", "semantics",
+                                               "qps", "fleet") if k in r)
+            lines.append(f"serve_error_{tag},0,{msg}")
+            continue
+        lines.append(
+            f"serve_{r['workload']}_{r['semantics']}"
+            f"_q{r['qps']:g}_f{r['fleet']},{r['elapsed_us']:.0f},"
+            f"p99_queueing_ms={r['p99_queueing_ms']:.3f};"
+            f"p99_ttft_ms={r['p99_ttft_ms']:.3f};"
+            f"tok_s={r['throughput_tok_s']:.1f};"
+            f"slo_met={int(r['slo_met'])};sims={r['plan_sims']}")
+    for a in fig["answers"]:
+        fleet = a["fleet_needed"] if a["fleet_needed"] is not None else "NA"
+        lines.append(
+            f"serve_answer_{a['workload']}_{a['semantics']}_q{a['qps']:g},0,"
+            f"fleet={fleet};slo_p99_{fig['slo_metric']}={fig['slo_ms']:g}ms")
+    return lines
+
+
+def serve_csv_lines(sweep: SweepConfig = DEFAULT_SWEEP) -> list[str]:
+    return _serve_csv(run_serve(sweep))
+
+
 # --------------------------------------------------------------------------- #
 # Full run: JSON per figure + markdown summary + benchmark CSV
 # --------------------------------------------------------------------------- #
@@ -405,5 +550,7 @@ def run_all(sweep: SweepConfig = DEFAULT_SWEEP,
             csv += _mapper_csv(results["mapper"])
         if "plan" in sections:
             csv += _plan_csv(results["plan"])
+        if "serve" in sections:
+            csv += _serve_csv(results["serve"])
         (out / "benchmarks.csv").write_text("\n".join(csv) + "\n")
     return results

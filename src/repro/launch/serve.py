@@ -1,13 +1,19 @@
-"""Batched decode serving driver.
+"""Serving driver: continuous batching + paged KV over the ServingEngine.
 
-Prefill is a forward pass that also populates the KV cache implicitly via
-one serve_step per prompt token (CPU-scale demo); the serving loop then
-decodes greedily with a batched, donated cache.  On a production mesh the
-same ``build_serve_step`` artifact runs the decode_32k / long_500k cells.
+The default path seats every prompt through the engine
+(:mod:`repro.serve.engine`): chunked **batched** prefill under a
+prefill-phase ExecutionPlan, then vmapped per-slot decode under a
+decode-phase plan — prefill/decode disaggregation with one plan per phase
+via :func:`~repro.plan.plan_for_launch`.
+
+``--legacy-loop`` keeps the pre-serving-engine behaviour (one batch, one
+serve_step per prompt token) as an escape hatch and as the reference the
+token-equivalence test pins against: the engine must produce exactly the
+tokens the legacy loop does, request by request.
 
 Example:
-  PYTHONPATH=src python -m repro.launch.serve --arch qwen2-1.5b --reduced \
-      --batch 4 --prompt-len 16 --gen 16 --psum-mode ina
+  PYTHONPATH=src python -m repro.launch.serve --arch qwen2-1.5b --reduced \\
+      --batch 4 --prompt-len 16 --gen 16 --slots 2 --psum-mode ina
 """
 from __future__ import annotations
 
@@ -27,21 +33,90 @@ from repro.parallel.tp import ParallelCtx
 from repro.plan import add_plan_cli_args, plan_for_launch
 
 
-def main() -> None:
+def build_parser() -> argparse.ArgumentParser:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True, choices=sorted(ARCHS))
     ap.add_argument("--reduced", action="store_true")
-    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--batch", type=int, default=4,
+                    help="number of requests (legacy: batch rows)")
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--gen", type=int, default=16)
     ap.add_argument("--psum-mode", default="ina", choices=CLI_PSUM_MODES)
     add_plan_cli_args(ap)
     ap.add_argument("--model-parallel", type=int, default=1)
-    args = ap.parse_args()
+    # engine path
+    ap.add_argument("--slots", type=int, default=None,
+                    help="continuous-batching slots (default: --batch)")
+    ap.add_argument("--block-size", type=int, default=16)
+    ap.add_argument("--prefill-chunk", type=int, default=8)
+    ap.add_argument("--no-batched-prefill", action="store_true",
+                    help="prefill via the per-token decode loop")
+    ap.add_argument("--check", action="store_true",
+                    help="verify paged==monolithic cache on every retire")
+    ap.add_argument("--legacy-loop", action="store_true",
+                    help="pre-engine path: one batch, per-token prefill")
+    return ap
 
-    cfg = ARCHS[args.arch]
-    if args.reduced:
-        cfg = cfg.reduced()
+
+def make_prompts(cfg, batch: int, prompt_len: int):
+    """The seeded prompt block both paths share (key 7, legacy-compatible)."""
+    return jax.random.randint(jax.random.PRNGKey(7), (batch, prompt_len), 3,
+                              cfg.vocab)
+
+
+def run_engine(args, cfg) -> None:
+    from repro.serve.batching import Request
+    from repro.serve.engine import ServingEngine
+
+    mesh = make_host_mesh(args.model_parallel)
+    max_seq = args.prompt_len + args.gen + 1
+    slots = args.slots or args.batch
+    # one plan per phase: prefill and decode disaggregate
+    dshape = ShapeConfig("cli", max_seq, slots, "decode")
+    pshape = ShapeConfig("cli", max_seq, slots, "prefill")
+    decode_plan, _ = plan_for_launch(cfg, mesh, dshape, args.psum_mode,
+                                     plan_dir=args.plan_dir,
+                                     enabled=not args.no_plan)
+    prefill_plan, _ = plan_for_launch(cfg, mesh, pshape, args.psum_mode,
+                                      plan_dir=args.plan_dir,
+                                      enabled=not args.no_plan)
+    block = args.block_size
+    if max_seq % block:
+        block = 1 << max(0, (max_seq & -max_seq).bit_length() - 1)
+        block = min(block, args.block_size)
+        print(f"[serve] block size {args.block_size} does not divide "
+              f"max_seq {max_seq}; using {block}")
+    engine = ServingEngine(
+        cfg, slots=slots, max_seq=max_seq, block_size=block,
+        prefill_chunk=args.prefill_chunk, psum_mode=args.psum_mode,
+        prefill_plan=prefill_plan, decode_plan=decode_plan,
+        batched_prefill=not args.no_batched_prefill, check=args.check,
+        model_parallel=args.model_parallel)
+
+    prompts = make_prompts(cfg, args.batch, args.prompt_len)
+    requests = [
+        Request(rid=f"req{i}", prompt_len=args.prompt_len,
+                max_new=args.gen + 1,
+                prompt=tuple(int(t) for t in prompts[i]))
+        for i in range(args.batch)]
+
+    t0 = time.time()
+    report = engine.run(requests)
+    dt = time.time() - t0
+    total = sum(len(r["tokens"]) for r in report.requests)
+    print(f"[serve] engine: {args.batch} requests on {slots} slots, "
+          f"{report.iterations} iterations ({report.prefill_chunks} prefill "
+          f"chunks, {report.decode_steps} decode steps), {total} tokens in "
+          f"{dt*1e3:.0f} ms ({total/dt:.1f} tok/s)")
+    by_rid = report.tokens()
+    sample = by_rid["req0"]
+    print(f"[serve] sample req0: {sample}")
+    for rid, toks in by_rid.items():
+        assert all(0 <= t < cfg.vocab for t in toks), rid
+
+
+def run_legacy(args, cfg) -> None:
+    """The pre-engine loop: one fixed batch, per-token prefill steps."""
     model = get_model(cfg)
     mesh = make_host_mesh(args.model_parallel)
 
@@ -58,9 +133,7 @@ def main() -> None:
     cache = jax.device_put(model.init_cache(args.batch, max_seq),
                            ss.cache_sharding)
 
-    key = jax.random.PRNGKey(7)
-    prompts = jax.random.randint(key, (args.batch, args.prompt_len), 3,
-                                 cfg.vocab)
+    prompts = make_prompts(cfg, args.batch, args.prompt_len)
     media = None
     if cfg.family in ("encdec", "vlm") and cfg.num_media_tokens:
         media = jnp.ones((args.batch, cfg.num_media_tokens, cfg.d_model),
@@ -71,7 +144,6 @@ def main() -> None:
         cache = jax.device_put(cache, ss.cache_sharding)
 
     # prefill token-by-token through the serve step (keeps one artifact)
-    tok = prompts[:, :1]
     t0 = time.time()
     for pos in range(args.prompt_len):
         batch = {"tokens": prompts[:, pos:pos + 1],
@@ -100,6 +172,20 @@ def main() -> None:
     print(f"[serve] sample row: {out[0].tolist()}")
     assert out.shape == (args.batch, args.gen)
     assert bool((out >= 0).all()) and bool((out < cfg.vocab).all())
+
+
+def main(argv=None) -> None:
+    args = build_parser().parse_args(argv)
+    cfg = ARCHS[args.arch]
+    if args.reduced:
+        cfg = cfg.reduced()
+    if args.legacy_loop or cfg.family in ("encdec", "vlm"):
+        if not args.legacy_loop:
+            print(f"[serve] family {cfg.family!r} needs media plumbing; "
+                  "running the legacy loop")
+        run_legacy(args, cfg)
+    else:
+        run_engine(args, cfg)
 
 
 if __name__ == "__main__":

@@ -54,6 +54,24 @@ class Model:
     def decode_step(self, params, batch, cache, pctx=None):
         return self.mod.decode_step(params, self.cfg, batch, cache, pctx)
 
+    @property
+    def has_prefill(self) -> bool:
+        """Does this family implement a batched cache-populating prefill?
+        Families without one fall back to a per-token decode loop in the
+        serving engine (repro.serve.engine)."""
+        return hasattr(self.mod, "prefill")
+
+    def prefill(self, params, batch, cache, pctx=None, pos_offset=0):
+        """Batched causal forward over a chunk that writes into ``cache``
+        at absolute positions ``pos_offset..pos_offset+C-1``; returns
+        (logits [B, C, V], new cache)."""
+        if not self.has_prefill:
+            raise NotImplementedError(
+                f"family {self.cfg.family!r} has no batched prefill; "
+                "use a decode-step loop")
+        return self.mod.prefill(params, self.cfg, batch, cache, pctx,
+                                pos_offset)
+
     def gemm_layers(self, tokens: int = 256):
         """One decoder block's GEMMs (:func:`repro.core.ops.transformer_gemms`)
         — the unit the plan builder's mapper search and pallas tile planning
@@ -165,6 +183,27 @@ def param_specs(params, mesh=None) -> dict:
     mesh_shape = dict(mesh.shape) if mesh is not None else None
     return jax.tree_util.tree_map_with_path(
         lambda p, l: _leaf_spec(p, l, mesh_shape), params)
+
+
+def cache_batch_axes(cfg: ModelConfig) -> dict:
+    """Pytree (mirroring the decode cache) of each leaf's batch-axis index.
+
+    Derived from :func:`cache_specs` by planting a sentinel where the batch
+    axes go, so per-family axis knowledge lives in exactly one place.  The
+    serving engine uses this to vmap a per-request decode over cache slots
+    and to slice single requests out of a batched cache
+    (``repro.serve.kvcache`` / ``parallel.steps.build_paged_serve_step``).
+    """
+    marker = ("__batch__",)
+
+    def axis_of(spec: P) -> int:
+        for i, e in enumerate(spec):
+            if e == marker:
+                return i
+        raise ValueError(f"cache spec {spec} has no batch axis")
+
+    return jax.tree.map(axis_of, cache_specs(cfg, batch_axes=marker),
+                        is_leaf=lambda x: isinstance(x, P))
 
 
 # --------------------------------------------------------------------------- #

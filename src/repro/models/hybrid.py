@@ -79,7 +79,8 @@ def shared_block(sp: dict, x: jax.Array, x0: jax.Array, inv_norm, cfg,
                                           (0, pos, 0, 0))
         cv = jax.lax.dynamic_update_slice(cache["v"], v.astype(cache["v"].dtype),
                                           (0, pos, 0, 0))
-        o = L.attn_full(q, ck.astype(q.dtype), cv.astype(q.dtype), causal=False)
+        o = L.attn_full(q, ck.astype(q.dtype), cv.astype(q.dtype),
+                        causal=True, q_offset=pos)
         new_cache = {"k": ck, "v": cv}
     o = row_linear(o.reshape(b, s, heads * hd), sp["attn"]["wo"], pctx)
     attn_out = o @ sp["wo_down"].astype(o.dtype)          # 2D -> D

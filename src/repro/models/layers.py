@@ -208,14 +208,21 @@ def attn_block(p: dict, x: jax.Array, *, n_heads: int, n_kv: int,
 def attn_block_decode(p: dict, x: jax.Array, cache_k, cache_v, pos, *,
                       n_heads: int, n_kv: int, head_dim: int, cos, sin,
                       eps: float = 1e-5, pctx: Optional[ParallelCtx] = None):
-    """Single-token decode with a KV cache [B, S, K, D]; returns (y, k, v)."""
+    """Single-token decode with a KV cache [B, S, K, D]; returns (y, k, v).
+
+    Attention is masked to cache positions ``<= pos`` (``causal=True`` with
+    the query offset at ``pos``): the zero-initialized tail of the cache
+    must not dilute the softmax, and masking it makes a per-token decode
+    loop agree with a batched causal prefill over the same tokens.
+    """
     b = x.shape[0]
     q, k, v = attn_qkv(p, x, n_heads, n_kv, head_dim, cos, sin, eps, pctx)
     ck = jax.lax.dynamic_update_slice(cache_k, k.astype(cache_k.dtype),
                                       (0, pos, 0, 0))
     cv = jax.lax.dynamic_update_slice(cache_v, v.astype(cache_v.dtype),
                                       (0, pos, 0, 0))
-    o = attn_full(q, ck.astype(q.dtype), cv.astype(q.dtype), causal=False)
+    o = attn_full(q, ck.astype(q.dtype), cv.astype(q.dtype), causal=True,
+                  q_offset=pos)
     y = row_linear(o.reshape(b, 1, n_heads * head_dim), p["wo"], pctx)
     return y, ck, cv
 

@@ -212,7 +212,8 @@ def _decode_attn(p, x, lat_c, kr_c, pos, cfg: ModelConfig, cos, sin, pctx):
         [k_nope, jnp.broadcast_to(kr_c.astype(x.dtype)[:, :, None, :],
                                   (b, s_k, h, a.qk_rope_head_dim))], axis=-1)
     q = jnp.concatenate([q_nope, q_rope], axis=-1)
-    o = L.attn_full(q, k, v, causal=False)
+    # mask the zero-initialized latent-cache tail (positions > pos)
+    o = L.attn_full(q, k, v, causal=True, q_offset=pos)
     y = row_linear(o.reshape(b, 1, h * a.v_head_dim), p["wo"], pctx)
     return y, lat_c, kr_c
 

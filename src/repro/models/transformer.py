@@ -108,6 +108,55 @@ def loss(params: dict, cfg: ModelConfig, batch: dict,
 
 
 # --------------------------------------------------------------------------- #
+# prefill: batched forward that also populates the KV cache
+# --------------------------------------------------------------------------- #
+def prefill(params: dict, cfg: ModelConfig, batch: dict, cache: dict,
+            pctx: Optional[ParallelCtx] = None, pos_offset=0):
+    """Causal forward over a token chunk that writes K/V into the cache.
+
+    ``batch["tokens"]``: [B, C] chunk starting at absolute position
+    ``pos_offset`` (python int or traced scalar — one compile serves every
+    chunk of a chunked prefill).  Attention runs over the *whole* cache with
+    the causal mask anchored at ``pos_offset``, so each row reproduces
+    exactly what a per-token ``decode_step`` loop would compute — this is
+    the batched replacement for ``launch/serve.py``'s legacy prompt loop.
+    Returns (logits [B, C, V], new cache).
+    """
+    dt = _dtype(cfg)
+    tokens = batch["tokens"]
+    b, c = tokens.shape
+    hd = cfg.resolved_head_dim
+    x = L.embed(params["embed"], tokens, dt)
+    pos = jnp.arange(c) + pos_offset
+    cos, sin = L.rope_cos_sin(pos, hd, cfg.rope_theta)
+
+    def body(x, lp_and_cache):
+        lp, ck, cv = lp_and_cache
+        h = L.rms_norm(x, lp["ln1"], cfg.norm_eps)
+        q, k, v = L.attn_qkv(lp["attn"], h, cfg.n_heads, cfg.n_kv_heads, hd,
+                             cos, sin, cfg.norm_eps, pctx)
+        ck = jax.lax.dynamic_update_slice(ck, k.astype(ck.dtype),
+                                          (0, pos_offset, 0, 0))
+        cv = jax.lax.dynamic_update_slice(cv, v.astype(cv.dtype),
+                                          (0, pos_offset, 0, 0))
+        o = L.attn_full(q, ck.astype(q.dtype), cv.astype(q.dtype),
+                        causal=True, q_offset=pos_offset)
+        x = x + L.row_linear(o.reshape(b, c, cfg.n_heads * hd),
+                             lp["attn"]["wo"], pctx)
+        x = x + L.mlp_block(lp["mlp"], L.rms_norm(x, lp["ln2"], cfg.norm_eps),
+                            pctx)
+        return x, (ck, cv)
+
+    x, kv = jax.lax.scan(body, x, (params["layers"], cache["k"], cache["v"]),
+                         unroll=True if cfg.scan_unroll else 1)
+    x = L.rms_norm(x, params["ln_f"], cfg.norm_eps)
+    head = params.get("lm_head")
+    if head is None:
+        head = params["embed"].T
+    return L.logits_head(x, head, pctx), {"k": kv[0], "v": kv[1]}
+
+
+# --------------------------------------------------------------------------- #
 # decode
 # --------------------------------------------------------------------------- #
 def init_cache(cfg: ModelConfig, batch: int, max_seq: int) -> dict:

@@ -157,6 +157,143 @@ def build_serve_step(model: Model, mesh: Mesh, shape: ShapeConfig,
                      cache_shapes=cshapes)
 
 
+@dataclasses.dataclass
+class PagedServeStep:
+    """Continuous-batching decode artifact (repro.serve engine).
+
+    ``fn(params, batch, cache) -> (next_tok [B], cache)`` where
+    ``batch = {"tokens": [B, 1], "pos": [B]}`` carries a **per-slot**
+    position — each cache slot advances independently, which is what lets
+    requests join/leave the batch at token boundaries.  Semantically slot
+    ``i`` computes exactly what a ``B=1`` ``decode_step`` at ``pos[i]``
+    would (the step is a vmap of the per-request decode), so continuous
+    batching cannot change any request's output.
+    """
+
+    fn: object
+    param_sharding: dict
+    cache_sharding: dict
+    param_shapes: dict
+    cache_shapes: dict
+    cache_batch_axes: dict        # per-leaf batch-axis index (slot plumbing)
+
+
+def build_paged_serve_step(model: Model, mesh: Mesh, shape: ShapeConfig,
+                           pctx: Optional[ParallelCtx] = None,
+                           donate_cache: bool = True,
+                           plan=None) -> PagedServeStep:
+    """Per-slot-position decode step for the paged-KV serving engine.
+
+    ``shape.global_batch`` is the slot count (the continuous-batching
+    capacity), ``shape.seq_len`` the per-slot cache length.  Inactive slots
+    simply decode garbage that the engine ignores; their cache writes land
+    at positions the scheduler will overwrite before they become visible
+    (decode attention is masked to ``<= pos``).
+    """
+    from repro.models.api import cache_batch_axes
+
+    cfg = model.cfg
+    pctx = _with_plan(pctx, mesh, plan)
+    baxes = _data_axes(mesh)
+    baxis = cache_batch_axes(cfg)
+
+    pshapes = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    pspecs = fit_specs(param_specs(pshapes, mesh), pshapes, mesh)
+    psh = jax.tree.map(lambda s: NamedSharding(mesh, s), pspecs,
+                       is_leaf=lambda x: isinstance(x, P))
+    cshapes = jax.eval_shape(
+        partial(model.init_cache, shape.global_batch, shape.seq_len))
+    cspecs = fit_specs(cache_specs(cfg, baxes), cshapes, mesh)
+    csh = jax.tree.map(lambda s: NamedSharding(mesh, s), cspecs,
+                       is_leaf=lambda x: isinstance(x, P))
+
+    has_media = cfg.family in ("encdec", "vlm") and cfg.num_media_tokens
+
+    def _row(params, tok, pos, cache_row, media_row=None):
+        # One request's decode: vmap stripped the batch axis from every
+        # cache leaf; reinsert a singleton so the family decode_step sees
+        # its usual batched layout.
+        cache_b = jax.tree.map(lambda l, a: jnp.expand_dims(l, a),
+                               cache_row, baxis)
+        batch = {"tokens": tok[None, :], "pos": pos}
+        if media_row is not None:
+            batch["media"] = media_row[None]
+        logits, new_cache = model.decode_step(params, batch, cache_b, pctx)
+        nxt = jnp.argmax(logits[0, -1, :], axis=-1)
+        return nxt, jax.tree.map(lambda l, a: jnp.squeeze(l, axis=a),
+                                 new_cache, baxis)
+
+    if has_media:
+        vmapped = jax.vmap(_row, in_axes=(None, 0, 0, baxis, 0),
+                           out_axes=(0, baxis))
+
+        def step(params, batch, cache):
+            return vmapped(params, batch["tokens"], batch["pos"], cache,
+                           batch["media"])
+    else:
+        vmapped = jax.vmap(_row, in_axes=(None, 0, 0, baxis),
+                           out_axes=(0, baxis))
+
+        def step(params, batch, cache):
+            return vmapped(params, batch["tokens"], batch["pos"], cache)
+
+    jitted = jax.jit(step, donate_argnums=(2,) if donate_cache else ())
+    return PagedServeStep(fn=jitted, param_sharding=psh, cache_sharding=csh,
+                          param_shapes=pshapes, cache_shapes=cshapes,
+                          cache_batch_axes=baxis)
+
+
+@dataclasses.dataclass
+class PrefillStep:
+    """Chunked cache-populating prefill artifact (repro.serve engine).
+
+    ``fn(params, batch, cache) -> (logits [B, C, V], cache)`` with
+    ``batch = {"tokens": [B, C], "pos0": scalar}``: one compile serves
+    every chunk of a chunked prefill (``pos0`` is traced).
+    """
+
+    fn: object
+    chunk: int
+    param_sharding: dict
+    cache_sharding: dict
+
+
+def build_prefill_step(model: Model, mesh: Mesh, shape: ShapeConfig,
+                       chunk: int, pctx: Optional[ParallelCtx] = None,
+                       donate_cache: bool = True, plan=None) -> PrefillStep:
+    """Batched prefill into a KV cache, ``chunk`` tokens per call.
+
+    Requires the family to implement ``prefill`` (``model.has_prefill``);
+    the serving engine falls back to a decode-step loop otherwise.
+    ``shape`` fixes the cache geometry (slots x max_seq) like
+    :func:`build_paged_serve_step`.
+    """
+    if not model.has_prefill:
+        raise NotImplementedError(
+            f"family {model.cfg.family!r} has no batched prefill")
+    cfg = model.cfg
+    pctx = _with_plan(pctx, mesh, plan)
+    baxes = _data_axes(mesh)
+
+    pshapes = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    pspecs = fit_specs(param_specs(pshapes, mesh), pshapes, mesh)
+    psh = jax.tree.map(lambda s: NamedSharding(mesh, s), pspecs,
+                       is_leaf=lambda x: isinstance(x, P))
+    cshapes = jax.eval_shape(
+        partial(model.init_cache, shape.global_batch, shape.seq_len))
+    cspecs = fit_specs(cache_specs(cfg, baxes), cshapes, mesh)
+    csh = jax.tree.map(lambda s: NamedSharding(mesh, s), cspecs,
+                       is_leaf=lambda x: isinstance(x, P))
+
+    def step(params, batch, cache):
+        return model.prefill(params, {"tokens": batch["tokens"]}, cache,
+                             pctx, pos_offset=batch["pos0"])
+
+    jitted = jax.jit(step, donate_argnums=(2,) if donate_cache else ())
+    return PrefillStep(fn=jitted, chunk=chunk, param_sharding=psh,
+                       cache_sharding=csh)
+
+
 def build_prefill(model: Model, mesh: Mesh, shape: ShapeConfig,
                   pctx: Optional[ParallelCtx] = None, plan=None):
     """Forward-only full-sequence pass (the prefill_32k cells)."""

@@ -1,0 +1,23 @@
+"""Serving subsystem: continuous batching + paged KV execution engine and
+the request-level cluster capacity simulator (DESIGN.md S12).
+
+* :mod:`repro.serve.engine` — real jax serving: continuous batching over a
+  vmapped per-slot decode step, chunked batched prefill, paged KV cache.
+* :mod:`repro.serve.cluster` — fleets of simulated instances with
+  NoC-plan-derived iteration latencies; TTFT/TPOT/p99 + fleet sizing.
+* ``python -m repro.serve`` — the capacity-planning CLI gluing both.
+"""
+from repro.serve.batching import Request, RequestQueue, RequestState, Scheduler
+from repro.serve.cluster import ClusterSimulator, search_fleet
+from repro.serve.costs import PlanCostModel, SyntheticCostModel, serve_plans
+from repro.serve.engine import ServingEngine
+from repro.serve.kvcache import BlockAllocator, PagedKVCache
+from repro.serve.metrics import percentile, summarize
+from repro.serve.traffic import load_trace, make_workload, poisson_arrivals
+
+__all__ = [
+    "BlockAllocator", "ClusterSimulator", "PagedKVCache", "PlanCostModel",
+    "Request", "RequestQueue", "RequestState", "Scheduler", "ServingEngine",
+    "SyntheticCostModel", "load_trace", "make_workload", "percentile",
+    "poisson_arrivals", "search_fleet", "serve_plans", "summarize",
+]

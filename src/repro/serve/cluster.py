@@ -1,0 +1,206 @@
+"""Request-level cluster simulator: fleets of serving instances on a
+shared NoC cost model.
+
+Answers the capacity question ("how many 8x8 meshes serve this traffic at
+p99 X ms?") by replaying a seeded workload through N simulated instances.
+Each instance reuses the engine's *actual* admission machinery — a
+:class:`~repro.serve.batching.Scheduler` over a block-accounting stand-in
+with the same free-list arithmetic as the paged KV cache — and advances in
+continuous-batching iterations whose latencies come from a
+:class:`~repro.serve.costs.PlanCostModel` (per-phase ExecutionPlans, NoC
+psum cycles) or a synthetic model in tests.
+
+Iteration semantics mirror :class:`~repro.serve.engine.ServingEngine`
+exactly: an iteration admits, chunk-prefills the admissions (first token),
+then runs one decode step over every slot still needing tokens.  The event
+loop is a plain heap with an insertion-order tiebreak, all arithmetic is
+python floats, and no wall-clock enters any record — same seed, same
+bytes.
+"""
+from __future__ import annotations
+
+import heapq
+import math
+
+from repro.serve.batching import Request, Scheduler
+from repro.serve.kvcache import BlockAllocator
+from repro.serve.metrics import summarize
+
+
+class SimKV:
+    """Block accounting only — the scheduler-facing surface of
+    :class:`~repro.serve.kvcache.PagedKVCache` without the pools."""
+
+    def __init__(self, block_size: int, num_blocks: int) -> None:
+        self.block_size = block_size
+        self.allocator = BlockAllocator(num_blocks)
+
+    def blocks_for(self, positions: int) -> int:
+        return math.ceil(positions / self.block_size)
+
+    def can_admit(self, positions: int) -> bool:
+        return self.allocator.can_alloc(self.blocks_for(positions))
+
+    def admit(self, rid, positions: int) -> None:
+        self.allocator.alloc(rid, self.blocks_for(positions))
+
+    def release(self, rid) -> int:
+        return self.allocator.free(rid)
+
+
+class _Instance:
+    def __init__(self, idx: int, slots: int, block_size: int,
+                 num_blocks: int, policy: str) -> None:
+        self.idx = idx
+        self.kv = SimKV(block_size, num_blocks)
+        self.sched = Scheduler(slots, self.kv, policy)
+        self.busy = False
+        self.work = 0              # outstanding work units (dispatch key)
+        self.iterations = 0
+        self._grants: list = []    # (slot, tokens, is_first) for this iter
+
+
+class ClusterSimulator:
+    def __init__(self, fleet: int, *, slots: int = 8, block_size: int = 16,
+                 num_blocks: int | None = None, max_seq: int = 1024,
+                 prefill_chunk: int = 64, cost=None, policy: str = "fcfs",
+                 ) -> None:
+        if fleet <= 0:
+            raise ValueError("fleet must be positive")
+        if cost is None:
+            raise ValueError("ClusterSimulator needs a cost model "
+                             "(PlanCostModel or SyntheticCostModel)")
+        if num_blocks is None:
+            num_blocks = slots * math.ceil(max_seq / block_size)
+        self.cost = cost
+        self.prefill_chunk = prefill_chunk
+        self.instances = [_Instance(i, slots, block_size, num_blocks, policy)
+                          for i in range(fleet)]
+        self.records: list[dict] = []
+        self.events = 0
+
+    # ------------------------------------------------------------------ #
+    def _work_units(self, req: Request) -> int:
+        return req.max_new + math.ceil(req.prompt_len / self.prefill_chunk)
+
+    def _dispatch(self, req: Request) -> _Instance:
+        """Least-outstanding-work instance, lowest index on ties."""
+        return min(self.instances, key=lambda inst: (inst.work, inst.idx))
+
+    def _start_iteration(self, inst: _Instance, t: float, push) -> None:
+        admitted = inst.sched.admit(now=t)
+        active = inst.sched.active
+        if not active:
+            if len(inst.sched.queue):
+                head = inst.sched.queue.peek()
+                raise RuntimeError(
+                    f"request {head.rid!r} can never be admitted on "
+                    f"instance {inst.idx} (prompt+max_new "
+                    f"{head.total_positions} exceeds capacity)")
+            inst.busy = False
+            return
+        admitted_slots = {st.slot for st in admitted}
+        dt = sum(math.ceil(st.req.prompt_len / self.prefill_chunk)
+                 * self.cost.prefill_chunk_seconds() for st in admitted)
+        grants = []
+        participants = 0
+        for slot, st in active.items():
+            gained = 0
+            if slot in admitted_slots:
+                gained += 1                       # prefill emits token #1
+            if len(st.generated) + gained < st.req.max_new \
+                    or slot not in admitted_slots:
+                gained += 1                       # decode step token
+                participants += 1
+            grants.append((slot, gained, slot in admitted_slots))
+        if participants:
+            dt += self.cost.decode_iter_seconds(participants)
+        inst._grants = grants
+        inst.busy = True
+        inst.iterations += 1
+        push(t + dt, "iter", inst)
+
+    def _end_iteration(self, inst: _Instance, t: float, push) -> None:
+        for slot, gained, is_first in inst._grants:
+            st = inst.sched.active[slot]
+            if is_first:
+                st.first_token_time = t
+            st.generated.extend([0] * min(
+                gained, st.req.max_new - len(st.generated)))
+        for slot in sorted(inst.sched.active):
+            st = inst.sched.active[slot]
+            if not st.done:
+                continue
+            inst.sched.finish(slot, now=t)
+            inst.work -= self._work_units(st.req)
+            self.records.append({
+                "rid": st.req.rid, "instance": inst.idx,
+                "arrival": st.req.arrival, "admit": st.admit_time,
+                "first_token": st.first_token_time, "finish": t,
+                "prompt_len": st.req.prompt_len,
+                "max_new": st.req.max_new,
+            })
+        self._start_iteration(inst, t, push)
+
+    # ------------------------------------------------------------------ #
+    def run(self, requests: list[Request],
+            max_events: int = 5_000_000) -> dict:
+        heap: list = []
+        seq = 0
+
+        def push(t: float, kind: str, payload) -> None:
+            nonlocal seq
+            heapq.heappush(heap, (t, seq, kind, payload))
+            seq += 1
+
+        for req in sorted(requests, key=lambda r: (r.arrival, r.rid)):
+            push(req.arrival, "arrival", req)
+
+        while heap:
+            if self.events >= max_events:
+                raise RuntimeError(f"simulation exceeded {max_events} events")
+            t, _, kind, payload = heapq.heappop(heap)
+            self.events += 1
+            if kind == "arrival":
+                inst = self._dispatch(payload)
+                inst.work += self._work_units(payload)
+                inst.sched.submit(payload)
+                if not inst.busy:
+                    self._start_iteration(inst, t, push)
+            else:
+                self._end_iteration(payload, t, push)
+
+        metrics = summarize(self.records)
+        metrics["fleet"] = len(self.instances)
+        metrics["iterations"] = sum(i.iterations for i in self.instances)
+        metrics["events"] = self.events
+        metrics["per_instance_requests"] = [
+            sum(1 for r in self.records if r["instance"] == i.idx)
+            for i in self.instances]
+        return metrics
+
+
+def search_fleet(requests: list[Request], slo_s: float,
+                 metric: str = "e2e_s", max_fleet: int = 16,
+                 **sim_kwargs) -> dict:
+    """Smallest fleet whose p99 ``metric`` meets ``slo_s``.
+
+    Returns ``{"fleet": n | None, "slo_s", "metric", "searched": [...]}``
+    where ``searched`` records every fleet size tried with its p99 —
+    capacity is monotone in fleet size for this workload model, so the
+    first size that meets the SLO is the answer.
+    """
+    searched = []
+    chosen = None
+    chosen_metrics = None
+    for n in range(1, max_fleet + 1):
+        sim = ClusterSimulator(n, **sim_kwargs)
+        metrics = sim.run(requests)
+        p99 = metrics[metric]["p99"]
+        searched.append({"fleet": n, "p99_s": p99,
+                         "throughput_rps": metrics["throughput_rps"]})
+        if p99 <= slo_s:
+            chosen, chosen_metrics = n, metrics
+            break
+    return {"fleet": chosen, "slo_s": slo_s, "metric": metric,
+            "searched": searched, "metrics": chosen_metrics}

@@ -1,0 +1,264 @@
+"""ServingEngine: continuous batching + paged KV over real jax decode.
+
+The engine is the *execution* half of the serving subsystem (the
+request-level :mod:`~repro.serve.cluster` simulator is the capacity half;
+they share :mod:`~repro.serve.batching` and the block-accounting rules of
+:mod:`~repro.serve.kvcache`).  Per iteration it
+
+1. admits queued requests into free cache slots (token boundary only),
+2. prefills each admitted prompt — batched chunked prefill
+   (:func:`~repro.parallel.steps.build_prefill_step`) when the family
+   implements ``prefill``, a per-token decode loop otherwise — writing the
+   prompt's K/V into the paged pool and emitting the first token,
+3. runs one vmapped per-slot-position decode step
+   (:func:`~repro.parallel.steps.build_paged_serve_step`) over the whole
+   slot batch, appends one token per active request, and pages out the
+   newly written cache column,
+4. retires finished requests, releasing their blocks and slot.
+
+Each slot computes exactly what the request would compute running alone
+(the decode step is a vmap of the B=1 decode; decode attention masks
+positions ``> pos``), so joining or leaving the batch can never change a
+request's tokens — the property tests/test_serve.py pins against the
+legacy one-batch loop.
+
+Prefill/decode are disaggregated: each phase carries its own
+``ParallelCtx`` (and, under ``--psum-mode auto``, its own
+:class:`~repro.plan.ExecutionPlan` via ``plan_for_launch`` — see
+``launch/serve.py``).
+
+Media-conditioned families (encdec/vlm) need a per-request media tensor
+threaded through admission; the engine rejects them — the legacy batch
+loop in ``launch/serve.py`` still serves those.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional
+
+import numpy as np
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.serve.batching import Request, RequestState, Scheduler
+from repro.serve.kvcache import PagedKVCache
+
+_NO_ENGINE_FAMILIES = ("encdec", "vlm")
+
+
+@dataclasses.dataclass
+class EngineReport:
+    """What one :meth:`ServingEngine.run` did (deterministic content)."""
+
+    requests: list                 # per-request dicts, finish order
+    iterations: int
+    prefill_chunks: int
+    decode_steps: int
+    checks: int                    # paged==monolithic verifications passed
+
+    def tokens(self) -> dict:
+        return {r["rid"]: r["tokens"] for r in self.requests}
+
+
+class ServingEngine:
+    def __init__(self, cfg: ModelConfig, *, slots: int = 4,
+                 max_seq: Optional[int] = None, block_size: int = 16,
+                 num_blocks: Optional[int] = None, prefill_chunk: int = 8,
+                 psum_mode: str = "ina", prefill_plan=None, decode_plan=None,
+                 batched_prefill: bool = True, policy: str = "fcfs",
+                 model_parallel: int = 1, check: bool = False,
+                 param_seed: int = 0) -> None:
+        import jax
+
+        from repro.launch.mesh import make_host_mesh
+        from repro.models.api import get_model
+        from repro.parallel.steps import (build_paged_serve_step,
+                                          build_prefill_step)
+        from repro.parallel.tp import ParallelCtx
+
+        if cfg.family in _NO_ENGINE_FAMILIES:
+            raise ValueError(
+                f"family {cfg.family!r} needs per-request media plumbing; "
+                "use launch/serve.py --legacy-loop")
+        self.cfg = cfg
+        self.model = get_model(cfg)
+        self.slots = slots
+        self.max_seq = max_seq or cfg.max_seq
+        self.prefill_chunk = prefill_chunk
+        self.check = check
+        if num_blocks is None:
+            # enough for every slot to hold a full-length request
+            num_blocks = slots * math.ceil(self.max_seq / block_size)
+        self.kv = PagedKVCache(cfg, self.max_seq, block_size, num_blocks)
+        self.sched = Scheduler(slots, self.kv, policy)
+
+        self.mesh = make_host_mesh(model_parallel)
+        pctx_d = ParallelCtx(mesh=self.mesh, psum_mode=psum_mode,
+                             plan=decode_plan)
+        pctx_p = ParallelCtx(mesh=self.mesh, psum_mode=psum_mode,
+                             plan=prefill_plan)
+        dshape = ShapeConfig("serve", self.max_seq, slots, "decode")
+        self.step = build_paged_serve_step(self.model, self.mesh, dshape,
+                                           pctx_d, donate_cache=True)
+        self.baxis = self.step.cache_batch_axes
+
+        self.prefill_step = None
+        if batched_prefill and self.model.has_prefill:
+            pshape = ShapeConfig("serve", self.max_seq, 1, "prefill")
+            self.prefill_step = build_prefill_step(
+                self.model, self.mesh, pshape, prefill_chunk, pctx_p,
+                donate_cache=True)
+            self._pcache = self.model.init_cache(1, self.max_seq)
+        else:
+            # per-token fallback: B=1 decode loop doubles as prefill
+            self._loop_step = jax.jit(
+                lambda p, t, pos, c: self.model.decode_step(
+                    p, {"tokens": t, "pos": pos}, c, pctx_p))
+
+        self.params = jax.device_put(
+            self.model.init(jax.random.PRNGKey(param_seed)),
+            self.step.param_sharding)
+        self.working = self.model.init_cache(slots, self.max_seq)
+        self._jnp = jax.numpy
+        self._jax = jax
+
+    # ------------------------------------------------------------------ #
+    def _extract_row(self, cache, slot: int):
+        """One slot's cache row (host numpy, batch axis removed)."""
+        jnp = self._jnp
+        return self._jax.tree.map(
+            lambda leaf, a: np.asarray(jnp.take(leaf, slot, axis=a)),
+            cache, self.baxis)
+
+    def _seat(self, st: RequestState) -> None:
+        """Materialize the request's pooled row into its working-cache
+        slot (zeros past its length — masked by decode attention)."""
+        jnp = self._jnp
+        row = self.kv.gather_row(st.req.rid, st.req.prompt_len)
+
+        def put(leaf, r, a, slot=st.slot):
+            idx = (slice(None),) * a + (slot,)
+            return leaf.at[idx].set(jnp.asarray(r, dtype=leaf.dtype))
+
+        self.working = self._jax.tree.map(put, self.working, row, self.baxis)
+
+    def _prefill(self, st: RequestState) -> tuple[int, int]:
+        """Run the prompt, write its K/V into the pool, return (first
+        generated token, chunk/step count)."""
+        jnp = self._jnp
+        req = st.req
+        prompt = np.asarray(req.prompt, np.int32)
+        plen = req.prompt_len
+        if self.prefill_step is not None:
+            chunk = self.prefill_chunk
+            steps = 0
+            logits = None
+            for c0 in range(0, plen, chunk):
+                part = prompt[c0:c0 + chunk]
+                toks = np.zeros((1, chunk), np.int32)
+                toks[0, :len(part)] = part     # pad tail: causally masked
+                logits, self._pcache = self.prefill_step.fn(
+                    self.params,
+                    {"tokens": jnp.asarray(toks),
+                     "pos0": jnp.asarray(c0, jnp.int32)},
+                    self._pcache)
+                steps += 1
+            first = int(jnp.argmax(logits[0, (plen - 1) % chunk]))
+            row = self._extract_row(self._pcache, 0)
+        else:
+            cache = self.model.init_cache(1, self.max_seq)
+            steps = 0
+            for pos in range(plen):
+                lg, cache = self._loop_step(
+                    self.params, jnp.asarray(prompt[None, pos:pos + 1]),
+                    jnp.asarray(pos, jnp.int32), cache)
+                steps += 1
+            first = int(jnp.argmax(lg[0, -1]))
+            row = self._extract_row(cache, 0)
+        self.kv.write_range(req.rid, 0, row, plen)
+        return first, steps
+
+    # ------------------------------------------------------------------ #
+    def run(self, requests: list[Request], max_iters: int = 100_000,
+            ) -> EngineReport:
+        jnp = self._jnp
+        for req in requests:
+            if req.prompt is None:
+                raise ValueError(f"{req.rid}: engine requests need tokens")
+            if req.total_positions > self.max_seq:
+                raise ValueError(f"{req.rid}: prompt+max_new "
+                                 f"{req.total_positions} > max_seq "
+                                 f"{self.max_seq}")
+            self.sched.submit(req)
+
+        finished, it, pf_chunks, dsteps, checks = [], 0, 0, 0, 0
+        while self.sched.has_work:
+            if it >= max_iters:
+                raise RuntimeError(f"engine exceeded {max_iters} iterations")
+            admitted = self.sched.admit(now=it)
+            for st in admitted:
+                first, steps = self._prefill(st)
+                pf_chunks += steps
+                self._seat(st)
+                st.generated.append(first)
+                st.first_token_time = it
+            if not self.sched.active:
+                if len(self.sched.queue):
+                    head = self.sched.queue.peek()
+                    raise RuntimeError(
+                        f"request {head.rid!r} can never be admitted "
+                        f"(needs {self.kv.blocks_for(head.total_positions)} "
+                        f"blocks of {self.kv.allocator.num_blocks})")
+                break
+            checks += self._retire(it, finished)
+            if not self.sched.active:
+                it += 1
+                continue
+
+            toks = np.zeros((self.slots, 1), np.int32)
+            pos = np.zeros((self.slots,), np.int32)
+            for slot, st in self.sched.active.items():
+                toks[slot, 0] = st.generated[-1]
+                pos[slot] = st.pos - 1           # feed token at its position
+            nxt, self.working = self.step.fn(
+                self.params,
+                {"tokens": jnp.asarray(toks), "pos": jnp.asarray(pos)},
+                self.working)
+            nxt = np.asarray(nxt)
+            dsteps += 1
+            for slot, st in list(self.sched.active.items()):
+                written = st.pos - 1
+                row = self._extract_row(self.working, slot)
+                self.kv.write_range(st.req.rid, written, row, 1)
+                st.generated.append(int(nxt[slot]))
+            it += 1
+            checks += self._retire(it, finished)
+        self.kv.check()
+        return EngineReport(requests=finished, iterations=it,
+                            prefill_chunks=pf_chunks, decode_steps=dsteps,
+                            checks=checks)
+
+    def _retire(self, it: int, finished: list) -> int:
+        checks = 0
+        for slot in sorted(self.sched.active):
+            st = self.sched.active[slot]
+            if not st.done:
+                continue
+            if self.check:
+                # every position actually fed is pooled bit-identically
+                covered = st.req.prompt_len + len(st.generated) - 1
+                self.kv.assert_matches(
+                    st.req.rid, self._extract_row(self.working, slot),
+                    min(covered, self.max_seq))
+                self.kv.check()
+                checks += 1
+            self.sched.finish(slot, now=it)
+            finished.append({
+                "rid": st.req.rid, "slot": slot,
+                "prompt_len": st.req.prompt_len,
+                "tokens": list(st.generated),
+                "admit_iter": int(st.admit_time),
+                "first_token_iter": int(st.first_token_time),
+                "finish_iter": it,
+            })
+        return checks

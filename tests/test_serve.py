@@ -1,0 +1,294 @@
+"""Serving engine + paged KV cache (DESIGN.md S12).
+
+Coverage map (ISSUE 6):
+
+* the engine's tokens match the legacy one-batch loop exactly — per
+  request, with fewer slots than requests (continuous batching cannot
+  change what any request computes);
+* per-token loop prefill and chunked batched prefill agree;
+* paged==monolithic: property tests on the :class:`BlockAllocator`
+  (no aliasing, no leaks under random alloc/extend/free) and on
+  :class:`PagedKVCache` round-trips (interleaved writes, bit-identical
+  gathers, zeros past the covered length);
+* scheduler admission: head-of-line blocking, priority order, slot and
+  block release on finish;
+* request validation (engine needs prompts; footprint must fit).
+"""
+import numpy as np
+import pytest
+
+from _hypothesis_compat import given, settings, strategies as st
+
+from repro.configs import ARCHS
+from repro.serve import (BlockAllocator, PagedKVCache, Request, Scheduler,
+                         ServingEngine)
+from repro.serve.cluster import SimKV
+
+ARCH = ARCHS["qwen2-1.5b"].reduced()
+PROMPT_LEN, GEN, BATCH = 6, 5, 3
+MAX_SEQ = PROMPT_LEN + GEN + 1      # engine feeds one token past the prompt
+
+
+def _prompts():
+    import jax
+    return np.asarray(jax.random.randint(
+        jax.random.PRNGKey(7), (BATCH, PROMPT_LEN), 3, ARCH.vocab))
+
+
+@pytest.fixture(scope="module")
+def reference_tokens():
+    """The legacy launch/serve.py loop: one fixed batch, per-token
+    prefill through the monolithic serve step.  Returns [B, GEN+1] —
+    the first generated token plus GEN greedy continuations."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.configs.base import ShapeConfig
+    from repro.launch.mesh import make_host_mesh
+    from repro.models.api import get_model
+    from repro.parallel.steps import build_serve_step
+    from repro.parallel.tp import ParallelCtx
+
+    model = get_model(ARCH)
+    mesh = make_host_mesh(1)
+    shape = ShapeConfig("test", MAX_SEQ, BATCH, "decode")
+    pctx = ParallelCtx(mesh=mesh, psum_mode="ina")
+    ss = build_serve_step(model, mesh, shape, pctx, donate_cache=True)
+    params = jax.device_put(model.init(jax.random.PRNGKey(0)),
+                            ss.param_sharding)
+    cache = jax.device_put(model.init_cache(BATCH, MAX_SEQ),
+                           ss.cache_sharding)
+    prompts = _prompts()
+    for pos in range(PROMPT_LEN):
+        nxt, cache = ss.fn(
+            params, {"tokens": jnp.asarray(prompts[:, pos:pos + 1]),
+                     "pos": jnp.asarray(pos, jnp.int32)}, cache)
+    out = [np.asarray(nxt)]
+    tok = nxt[:, None]
+    for i in range(GEN):
+        nxt, cache = ss.fn(
+            params, {"tokens": tok,
+                     "pos": jnp.asarray(PROMPT_LEN + i, jnp.int32)}, cache)
+        out.append(np.asarray(nxt))
+        tok = nxt[:, None]
+    return prompts, np.stack(out, axis=1)
+
+
+def _requests(prompts):
+    return [Request(rid=f"r{i}", prompt_len=PROMPT_LEN, max_new=GEN + 1,
+                    prompt=tuple(int(t) for t in prompts[i]))
+            for i in range(BATCH)]
+
+
+@pytest.fixture(scope="module")
+def engine_report(reference_tokens):
+    prompts, _ = reference_tokens
+    eng = ServingEngine(ARCH, slots=2, max_seq=MAX_SEQ, block_size=4,
+                        prefill_chunk=4, check=True)
+    return eng.run(_requests(prompts))
+
+
+# --------------------------------------------------------------------------- #
+# Engine == legacy loop
+# --------------------------------------------------------------------------- #
+def test_engine_matches_legacy_loop(reference_tokens, engine_report):
+    """Continuous batching on 2 slots (< 3 requests) reproduces the
+    one-batch loop token-for-token — the serving-engine contract."""
+    _, ref = reference_tokens
+    tokens = engine_report.tokens()
+    assert set(tokens) == {f"r{i}" for i in range(BATCH)}
+    for i in range(BATCH):
+        assert tokens[f"r{i}"] == ref[i].tolist(), f"r{i} diverged"
+
+
+def test_engine_report_shape(engine_report):
+    rep = engine_report
+    assert rep.checks == BATCH               # every retire verified paged KV
+    assert rep.decode_steps >= GEN           # slots < requests => extra iters
+    assert {r["slot"] for r in rep.requests} <= {0, 1}
+    # 2 slots run concurrently; the third request waits for a retirement
+    admits = sorted(r["admit_iter"] for r in rep.requests)
+    assert admits[0] == admits[1] == 0 and admits[2] > 0
+
+
+def test_loop_prefill_matches_batched(reference_tokens):
+    """batched_prefill=False (per-token decode loop) produces the same
+    tokens as the chunked batched prefill path."""
+    prompts, ref = reference_tokens
+    eng = ServingEngine(ARCH, slots=1, max_seq=MAX_SEQ, block_size=4,
+                        prefill_chunk=4, batched_prefill=False, check=True)
+    rep = eng.run(_requests(prompts)[:1])
+    assert rep.tokens()["r0"] == ref[0].tolist()
+
+
+def test_engine_rejects_promptless_and_oversized():
+    eng = ServingEngine(ARCH, slots=1, max_seq=MAX_SEQ, block_size=4,
+                        prefill_chunk=4)
+    with pytest.raises(ValueError, match="need tokens"):
+        eng.run([Request(rid="x", prompt_len=4, max_new=2)])
+    with pytest.raises(ValueError, match="max_seq"):
+        eng.run([Request(rid="y", prompt_len=MAX_SEQ, max_new=2,
+                         prompt=tuple(range(3, 3 + MAX_SEQ)))])
+
+
+# --------------------------------------------------------------------------- #
+# BlockAllocator properties
+# --------------------------------------------------------------------------- #
+@given(st.lists(st.tuples(st.sampled_from(["alloc", "extend", "free"]),
+                          st.integers(0, 5), st.integers(0, 4)),
+                max_size=60))
+@settings(max_examples=60, deadline=None)
+def test_allocator_never_aliases_or_leaks(ops):
+    """Random alloc/extend/free interleavings: every block is free or
+    owned by exactly one request, and free + live == total, always."""
+    alloc = BlockAllocator(12)
+    owned: dict[int, int] = {}
+    for op, rid, n in ops:
+        try:
+            if op == "alloc":
+                blocks = alloc.alloc(rid, n)
+                assert len(blocks) == n
+                owned[rid] = n
+            elif op == "extend":
+                alloc.extend(rid, n)
+                owned[rid] += n
+            else:
+                freed = alloc.free(rid)
+                assert freed == owned.pop(rid)
+        except (KeyError, MemoryError):
+            pass                              # rejected ops must not mutate
+        alloc.check()
+        assert alloc.live_blocks == sum(owned.values())
+        assert alloc.free_blocks == 12 - alloc.live_blocks
+    for rid in list(owned):
+        alloc.free(rid)
+    assert alloc.free_blocks == 12
+
+
+def test_allocator_deterministic_order():
+    a = BlockAllocator(6)
+    assert a.alloc("a", 2) == [0, 1]
+    assert a.alloc("b", 2) == [2, 3]
+    a.free("a")
+    assert a.alloc("c", 3) == [0, 1, 4]       # reuses lowest ids first
+
+
+# --------------------------------------------------------------------------- #
+# PagedKVCache round-trips
+# --------------------------------------------------------------------------- #
+@pytest.fixture(scope="module")
+def kv():
+    return PagedKVCache(ARCH, max_seq=16, block_size=4, num_blocks=12)
+
+
+def _random_row(kv, rng):
+    leaves = []
+    for meta in kv.leaves:
+        if np.issubdtype(meta.dtype, np.integer):
+            leaves.append(rng.integers(0, 7, size=meta.row_shape)
+                          .astype(meta.dtype))
+        else:
+            leaves.append(rng.standard_normal(size=meta.row_shape)
+                          .astype(meta.dtype))
+    return kv._treedef.unflatten(leaves)
+
+
+@given(st.integers(0, 2 ** 16), st.integers(1, 16), st.integers(1, 16))
+@settings(max_examples=25, deadline=None)
+def test_paged_roundtrip_bit_identical(kv, seed, len_a, len_b):
+    """Two requests' rows written interleaved, chunk by chunk: each
+    gathers back bit-identical to its source, zeros past its length,
+    and releasing one leaves the other untouched."""
+    rng = np.random.default_rng(seed)
+    kv.admit("a", len_a)
+    kv.admit("b", len_b)
+    try:
+        row_a, row_b = _random_row(kv, rng), _random_row(kv, rng)
+        pos_a = pos_b = 0
+        while pos_a < len_a or pos_b < len_b:
+            if pos_a < len_a:
+                n = min(int(rng.integers(1, 5)), len_a - pos_a)
+                kv.write_range("a", pos_a, row_a, n)
+                pos_a += n
+            if pos_b < len_b:
+                n = min(int(rng.integers(1, 5)), len_b - pos_b)
+                kv.write_range("b", pos_b, row_b, n)
+                pos_b += n
+        kv.assert_matches("a", row_a, len_a)
+        kv.assert_matches("b", row_b, len_b)
+        kv.check()
+        # zeros past the covered length on every paged leaf
+        got = kv._treedef.flatten_up_to(kv.gather_row("a", len_a))
+        for meta, leaf in zip(kv.leaves, got):
+            if not meta.paged:
+                continue
+            tail = np.moveaxis(leaf, meta.batch_axis, 0)[len_a:]
+            assert not np.any(tail.astype(np.float32))
+        kv.release("b")
+        kv.check()
+        kv.assert_matches("a", row_a, len_a)
+    finally:
+        for rid in list(kv.allocator.tables):
+            kv.release(rid)
+    assert kv.allocator.free_blocks == 12
+
+
+def test_kvcache_block_size_must_divide():
+    with pytest.raises(ValueError, match="divide"):
+        PagedKVCache(ARCH, max_seq=10, block_size=4, num_blocks=4)
+
+
+def test_kvcache_admission_accounting(kv):
+    assert kv.blocks_for(1) == 1 and kv.blocks_for(5) == 2
+    kv.admit("x", 16)                         # 4 blocks
+    kv.admit("y", 16)
+    kv.admit("z", 16)
+    assert not kv.can_admit(1)                # 12 blocks all reserved
+    assert kv.release("y") == 4
+    assert kv.can_admit(16)
+    kv.release("x")
+    kv.release("z")
+
+
+# --------------------------------------------------------------------------- #
+# Scheduler admission
+# --------------------------------------------------------------------------- #
+def test_scheduler_head_of_line_blocking():
+    """A too-big head request must not be overtaken by smaller ones."""
+    sched = Scheduler(4, SimKV(block_size=4, num_blocks=4))
+    sched.submit(Request(rid="big", prompt_len=12, max_new=4, arrival=0.0))
+    sched.submit(Request(rid="small", prompt_len=2, max_new=2, arrival=1.0))
+    assert [st.req.rid for st in sched.admit(now=2.0)] == ["big"]
+    assert sched.admit(now=2.0) == []         # small waits for blocks
+    sched.finish(0, now=3.0)
+    assert [st.req.rid for st in sched.admit(now=3.0)] == ["small"]
+
+
+def test_scheduler_priority_policy():
+    sched = Scheduler(1, SimKV(block_size=4, num_blocks=64),
+                      policy="priority")
+    sched.submit(Request(rid="late-hi", prompt_len=2, max_new=1,
+                         arrival=0.0, priority=0))
+    sched.submit(Request(rid="early-lo", prompt_len=2, max_new=1,
+                         arrival=0.0, priority=5))
+    assert sched.admit(now=0.0)[0].req.rid == "late-hi"
+
+
+def test_scheduler_releases_slot_and_blocks():
+    kv = SimKV(block_size=4, num_blocks=8)
+    sched = Scheduler(2, kv)
+    sched.submit(Request(rid="a", prompt_len=8, max_new=8))   # 4 blocks
+    sched.submit(Request(rid="b", prompt_len=8, max_new=8))
+    assert len(sched.admit()) == 2 and kv.allocator.free_blocks == 0
+    st = sched.finish(0, now=1.0)
+    assert st.req.rid == "a" and st.finish_time == 1.0
+    assert kv.allocator.free_blocks == 4
+    assert sched.n_active == 1 and sched.has_work
+
+
+def test_request_validation():
+    with pytest.raises(ValueError, match="positive"):
+        Request(rid="r", prompt_len=0, max_new=1)
+    with pytest.raises(ValueError, match="mismatch"):
+        Request(rid="r", prompt_len=3, max_new=1, prompt=(1, 2))
+    assert Request(rid="r", prompt_len=3, max_new=2).total_positions == 5
