@@ -1,0 +1,83 @@
+"""Static-analysis layer: what does verification cost vs actually running?
+
+Two comparisons over the shared corpora (``repro.analysis.corpus``):
+
+* **static vs replay** — per fig7-12 WS program, the full static pass
+  (``verify_program`` + compile + ``verify_compiled`` ledger conservation)
+  against the bit-exact double replay the test suite would otherwise lean
+  on (compiled run + heap run + equality check).  The static pass proves
+  route/DAG/CDG/ledger facts the replay can only witness, and the ratio is
+  the cost argument for running it in CI on every artifact;
+* **plan verification** — ``verify_plan(check_layers=True)`` over every
+  plan persisted in the default store (the 30-cell (config x phase) sweep
+  when warm), i.e. the ``verify --sections plans`` CI path.
+
+Plus the determinism lint over ``src/`` (one full AST pass per module).
+
+Returns ``(csv lines, perf dict)``; ``benchmarks/run.py --sections
+analysis`` lands the perf dict in the ``BENCH_<n>.json`` snapshot.
+"""
+import time
+
+
+def run(quick: bool = False) -> tuple[list[str], dict]:
+    from repro.analysis.corpus import ws_programs
+    from repro.analysis.lint import lint_paths
+    from repro.analysis.verify import (verify_compiled, verify_plan,
+                                       verify_program)
+    from repro.core.noc.collective.engine import run_program
+    from repro.core.noc.compiled import compile_program
+    from repro.plan.store import PlanStore
+
+    corpus = list(ws_programs(quick=quick, window=2))
+
+    t0 = time.time()
+    findings = 0
+    for shape, cfg, prog in corpus:
+        findings += len(verify_program(prog, cfg))
+        cp = compile_program(prog, cfg)
+        findings += len(verify_compiled(cp, prog, cfg))
+    static_s = time.time() - t0
+    assert findings == 0, f"{findings} finding(s) on the valid corpus"
+
+    t0 = time.time()
+    for shape, cfg, prog in corpus:
+        fast = run_program(prog, cfg)                      # compiled replay
+        slow = run_program(prog, cfg, engine="heap")       # ground truth
+        assert fast.latency_cycles == slow.latency_cycles
+        assert fast.ledger == slow.ledger
+    replay_s = time.time() - t0
+
+    store = PlanStore()
+    t0 = time.time()
+    plans = 0
+    for path in sorted(store.dir.glob("*.json")) if store.dir.exists() else []:
+        plan = store.load(path.stem)
+        if plan is None:
+            continue
+        plans += 1
+        assert verify_plan(plan, check_layers=True) == [], path.stem
+    plan_s = time.time() - t0
+
+    t0 = time.time()
+    lint = lint_paths(["src"])
+    lint_s = time.time() - t0
+    assert lint == [], f"{len(lint)} lint finding(s) in src/"
+
+    n = len(corpus)
+    perf = {
+        "programs": n, "quick": quick,
+        "static_s": static_s, "replay_s": replay_s,
+        "replay_over_static_x": replay_s / max(static_s, 1e-9),
+        "plans_verified": plans, "plan_verify_s": plan_s,
+        "lint_s": lint_s,
+    }
+    lines = [
+        f"analysis_static,{static_s * 1e6 / max(n, 1):.0f},programs={n}",
+        f"analysis_replay,{replay_s * 1e6 / max(n, 1):.0f},programs={n};"
+        f"x_static={perf['replay_over_static_x']:.1f}",
+        f"analysis_plans,{plan_s * 1e6 / max(plans, 1):.0f},plans={plans};"
+        f"check_layers=1",
+        f"analysis_lint,{lint_s * 1e6:.0f},findings=0",
+    ]
+    return lines, perf

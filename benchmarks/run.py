@@ -87,6 +87,13 @@ def _roofline(args):
     return roofline.run()
 
 
+def _analysis(args):
+    from benchmarks import bench_analysis
+    lines, perf = bench_analysis.run(quick=args.quick)
+    _PERF["analysis"] = perf
+    return lines
+
+
 SECTIONS = {
     "tables": _tables,
     "ws_ina": _ws_ina,
@@ -97,6 +104,7 @@ SECTIONS = {
     "mapper_full": _mapper_full,
     "plan": _plan,
     "serve": _serve,
+    "analysis": _analysis,
     "roofline": _roofline,
 }
 

@@ -1,0 +1,34 @@
+"""Static analysis over the repo's artifacts and its own source (DESIGN.md S13).
+
+Two halves, one findings vocabulary (:class:`~.findings.Finding`):
+
+* **Artifact verifier** (:mod:`.verify`) — checks PacketOp programs,
+  CompiledPrograms, mapper NetworkSchedules, persisted ExecutionPlans, and
+  the paged-KV free list *without running the event loop*: dependency-DAG
+  shape, route legality, channel-dependency-graph deadlock freedom,
+  algebraic collective correctness from ``contribs``/``delivers`` metadata,
+  static-ledger conservation, and plan invariants.  This is the cheap
+  oracle the vectorized backend (ROADMAP) will be validated against.
+* **Determinism lint** (:mod:`.lint`) — an AST rule registry over ``src/``
+  for the byte-determinism contract: unseeded randomness, wall-clock reads,
+  set-iteration order hazards, mutable default arguments, and persisted
+  writes bypassing ``atomic_write_text``.  ``# lint: allow(<rule>)``
+  pragmas suppress justified sites.
+
+CLI: ``python -m repro.analysis verify`` / ``python -m repro.analysis lint``
+(see EXPERIMENTS.md).  Opt-in hooks: ``engine.run_program(verify=True)``,
+``PlanStore(verify=True)``, ``mapper.search_network(debug=True)``.
+"""
+from .findings import Finding, VerificationError
+from .lint import LINT_RULES, lint_paths
+from .verify import (check_program, verify_allocator, verify_collective,
+                     verify_compiled, verify_kvcache, verify_plan,
+                     verify_program, verify_schedule)
+
+__all__ = [
+    "Finding", "VerificationError",
+    "LINT_RULES", "lint_paths",
+    "check_program", "verify_allocator", "verify_collective",
+    "verify_compiled", "verify_kvcache", "verify_plan", "verify_program",
+    "verify_schedule",
+]

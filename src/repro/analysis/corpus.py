@@ -1,0 +1,98 @@
+"""Artifact corpora the verifier CLI / bench / tests sweep over.
+
+One place enumerates "every fig7-12 plan shape" and "all tree collectives
+(both semantics x both allreduce algorithms)" so the CLI acceptance run,
+``benchmarks/bench_analysis.py``, and ``tests/test_analysis.py`` cannot
+drift apart on what *all* means.
+"""
+from __future__ import annotations
+
+from typing import Iterator, Optional
+
+from repro.core.noc.collective.schedule import (ALLREDUCE_ALGORITHMS,
+                                                COLLECTIVE_OPS, SEMANTICS,
+                                                plan_collective,
+                                                ws_round_program)
+from repro.core.noc.router import NocConfig
+
+#: PE-per-router sweep of the paper's figures.
+FIG_E_LIST = (1, 2, 4, 8)
+FIG_E_LIST_QUICK = (1, 4)
+#: fig7-9 compares ws_ina vs ws_noina; fig10-12 ws_ina vs os_gather.
+FIG_MODES = ("ws_ina", "ws_noina", "os_gather")
+FIG_WORKLOADS = ("alexnet", "vgg16", "resnet50")
+
+
+def collective_cases(mesh_n: int = 4) -> Iterator[dict]:
+    """Every (op, semantics[, algorithm]) over three participant shapes:
+    the full mesh, one row, and a scattered non-convex set."""
+    full = [(x, y) for x in range(mesh_n) for y in range(mesh_n)]
+    row = [(x, 0) for x in range(mesh_n)]
+    scattered = [(0, 0), (mesh_n - 1, 1), (1, mesh_n - 1),
+                 (mesh_n - 2, mesh_n - 2)]
+    for label, parts in (("full", full), ("row", row),
+                         ("scattered", scattered)):
+        for op in COLLECTIVE_OPS:
+            for semantics in SEMANTICS:
+                algorithms = ALLREDUCE_ALGORITHMS \
+                    if op == "allreduce" else ("reduce_bcast",)
+                for algorithm in algorithms:
+                    yield {"label": label, "op": op,
+                           "participants": parts,
+                           "semantics": semantics,
+                           "algorithm": algorithm}
+
+
+def collective_programs(cfg: Optional[NocConfig] = None,
+                        payload_bits: float = 512.0) -> Iterator[tuple]:
+    """``(case, cfg, program)`` for every :func:`collective_cases` entry."""
+    cfg = NocConfig(n=4) if cfg is None else cfg
+    for case in collective_cases(min(cfg.width, cfg.height)):
+        prog = plan_collective(
+            case["op"], case["participants"], payload_bits, cfg,
+            algorithm=case["algorithm"], semantics=case["semantics"])
+        yield case, cfg, prog
+
+
+def ws_plan_shapes(quick: bool = False,
+                   cfg: Optional[NocConfig] = None) -> list[dict]:
+    """Every distinct fig7-12 per-layer plan shape.
+
+    Dedup key: (mode, g, p, gather_flits, unicast_flits, e_pes) — exactly
+    the part of the plan that determines the emitted round program.
+    """
+    from repro.core.noc.traffic import layer_plan
+    from repro.core.workloads import WORKLOADS
+    cfg = NocConfig() if cfg is None else cfg
+    e_list = FIG_E_LIST_QUICK if quick else FIG_E_LIST
+    seen = set()
+    shapes = []
+    for workload in FIG_WORKLOADS:
+        for layer in WORKLOADS[workload]:
+            for e_pes in e_list:
+                for mode in FIG_MODES:
+                    plan = layer_plan(layer, cfg, e_pes, mode)
+                    key = (mode, plan.g, plan.p, plan.gather_flits,
+                           plan.unicast_flits, e_pes)
+                    if key in seen:
+                        continue
+                    seen.add(key)
+                    shapes.append({
+                        "workload": workload, "layer": layer.name,
+                        "mode": mode, "e_pes": e_pes, "g": plan.g,
+                        "p": plan.p, "gather_flits": plan.gather_flits,
+                        "unicast_flits": plan.unicast_flits,
+                    })
+    return shapes
+
+
+def ws_programs(quick: bool = False, window: int = 2,
+                cfg: Optional[NocConfig] = None) -> Iterator[tuple]:
+    """``(shape, cfg, program)`` for every distinct fig7-12 plan shape."""
+    cfg = NocConfig() if cfg is None else cfg
+    for shape in ws_plan_shapes(quick, cfg):
+        prog = ws_round_program(
+            cfg, shape["mode"], window, g=shape["g"], p=shape["p"],
+            gather_flits=shape["gather_flits"],
+            unicast_flits=shape["unicast_flits"], e_pes=shape["e_pes"])
+        yield shape, cfg, prog

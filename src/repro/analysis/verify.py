@@ -1,0 +1,662 @@
+"""Static artifact verification — every check runs without the event loop.
+
+The checks (ids are the ``Finding.check`` vocabulary):
+
+``dep-dag``
+    Dependency indices are prior-op indices (program order is topological,
+    so dangling/forward deps and cycles are impossible when this holds);
+    duplicates flagged; CompiledProgram ``children``/``dep_count`` agree
+    with the dep edges.
+``route``
+    Every non-virtual op's route is a unit-step path inside the mesh
+    (path overrides must start at ``src`` and end at ``dst``), the VC is
+    within ``effective_vcs``, and every ``delivers`` target is reachable
+    (the destination or a link head of the route) — a deliver target off
+    the route would silently never fire in either engine.
+``cdg-deadlock``
+    The per-VC channel dependency graph (edges between consecutive links
+    of each op's route, gem5-style) is acyclic.  Dimension-ordered XY
+    routes only turn X->Y so they can never cycle; tree-embedding path
+    overrides are sub-paths of XY routes and inherit that — a cyclic
+    override (e.g. a ring of turning paths on one VC) is flagged.
+``collective-fold`` / ``collective-deliver``
+    Algebraic collective correctness from ``contribs``/``delivers``
+    metadata: per reduce op the merged dependency contributions are
+    pairwise disjoint and preserved, every participant's operand enters
+    exactly once per chunk; reduce phases deliver only the chunk root,
+    multicast phases deliver every destination exactly once; the union of
+    delivered contributions matches the op's semantics end to end.
+``ledger``
+    Static-ledger conservation for a CompiledProgram: each op's energy
+    tuple equals the path-determined counts recomputed from its route
+    (flits x links, hops, NI crossings, adds), against the source
+    PacketOps when available.
+``plan-schema`` / ``plan-mode`` / ``plan-tile`` / ``plan-gemm``
+    ExecutionPlan invariants: schema hash current; psum modes in
+    ``AUTO_CANDIDATES`` and equal to the argmin of their recorded costs
+    under the plan's objective; tile blocks divide their GEMM dims and fit
+    the VMEM budget (priced by the same ``tile_working_set`` the planner
+    uses), covering every distinct GEMM shape; gemm verdicts reference the
+    model's real layers at the plan's token count.
+``kvcache``
+    Paged-KV free-list invariants: no block both free and mapped, no
+    aliasing across tables, free + live == total, per-request lengths
+    covered by their block tables.
+"""
+from __future__ import annotations
+
+from collections import Counter
+from typing import Iterable, Optional, Sequence
+
+from repro.core.noc.router import NocConfig
+from repro.core.noc.simulator import (effective_vcs, path_link_ids,
+                                      route_link_ids)
+
+from .findings import Finding, VerificationError
+
+Coord = tuple
+
+__all__ = [
+    "verify_program", "verify_collective", "verify_compiled",
+    "verify_schedule", "verify_plan", "verify_allocator", "verify_kvcache",
+    "check_program",
+]
+
+
+# --------------------------------------------------------------------------- #
+# Packet programs: DAG shape, route legality, CDG deadlock freedom
+# --------------------------------------------------------------------------- #
+def _op_route(op, width: int, height: int):
+    """``(strict_link_ids, links)`` for an op's route; strict ids are None
+    when any hop is not an in-mesh unit step."""
+    if op.path is not None:
+        strict, _, links = path_link_ids(width, height, tuple(op.path))
+    else:
+        strict, _, links = route_link_ids(width, height, op.src, op.dst)
+    return strict, links
+
+
+def _is_virtual(op) -> bool:
+    return op.flits == 0 and not op.inject and not op.eject
+
+
+def verify_program(prog: Sequence, cfg: Optional[NocConfig] = None
+                   ) -> list[Finding]:
+    """Statically check one PacketOp program (no simulation)."""
+    cfg = NocConfig() if cfg is None else cfg
+    width, height = cfg.width, cfg.height
+    vcs = effective_vcs(cfg)
+    out: list[Finding] = []
+    chains: list[tuple[int, tuple]] = []      # (vc, link ids) per routed op
+    for i, op in enumerate(prog):
+        where = f"op {i}" + (f" [{op.tag}]" if op.tag else "")
+        seen_deps = set()
+        for d in op.deps:
+            if not (isinstance(d, int) and 0 <= d < i):
+                out.append(Finding(
+                    "dep-dag", where,
+                    f"dep {d!r} is not a prior op index (program order "
+                    f"must be topological)"))
+            elif d in seen_deps:
+                out.append(Finding("dep-dag", where, f"duplicate dep {d}"))
+            seen_deps.add(d)
+        if op.flits < 0:
+            out.append(Finding("route", where,
+                               f"negative flit count {op.flits}"))
+        if _is_virtual(op):
+            continue                           # no network resources touched
+        if not 0 <= op.vc < vcs:
+            out.append(Finding(
+                "route", where,
+                f"vc {op.vc} outside the config's 0..{vcs - 1}"))
+        if op.path is not None:
+            p = tuple(op.path)
+            if not p or p[0] != tuple(op.src) or p[-1] != tuple(op.dst):
+                out.append(Finding(
+                    "route", where,
+                    f"path override runs {p[0] if p else None}->"
+                    f"{p[-1] if p else None}, op says {op.src}->{op.dst}"))
+                continue
+        strict, links = _op_route(op, width, height)
+        if strict is None:
+            out.append(Finding(
+                "route", where,
+                f"route {op.src}->{op.dst} takes a non-unit step or "
+                f"leaves the {width}x{height} mesh"))
+            continue
+        reachable = {op.dst} | {b for _, b in links}
+        if op.flits == 0:                      # completion delivers everything
+            reachable |= set(op.delivers)
+        for node in op.delivers:
+            if node not in reachable:
+                out.append(Finding(
+                    "route", where,
+                    f"delivers to {node}, which is neither the destination "
+                    f"nor on the route {op.src}->{op.dst} (the engines "
+                    f"would silently never deliver it)"))
+        chains.append((op.vc, strict))
+    out.extend(_cdg_findings(chains))
+    return out
+
+
+def _cdg_findings(chains: list) -> list[Finding]:
+    """Channel-dependency-graph deadlock check: one channel per (vc, link);
+    each op's route adds edges between its consecutive links; any cycle is
+    a potential wormhole deadlock (Dally/Seitz condition)."""
+    adj: dict = {}
+    for vc, link_ids in chains:
+        for a, b in zip(link_ids, link_ids[1:]):
+            adj.setdefault((vc, a), set()).add((vc, b))
+    adj = {k: sorted(v) for k, v in sorted(adj.items())}
+    color: dict = {}                 # 1 = on stack, 2 = finished
+    out: list[Finding] = []
+    seen_msgs = set()
+    for start in adj:
+        if color.get(start):
+            continue
+        stack = [(start, iter(adj[start]))]
+        path = [start]
+        color[start] = 1
+        while stack:
+            node, it = stack[-1]
+            advanced = False
+            for nxt in it:
+                c = color.get(nxt, 0)
+                if c == 1:           # back edge: reconstruct the cycle
+                    cyc = path[path.index(nxt):]
+                    msg = (f"channel dependency cycle on vc {nxt[0]}: links "
+                           + " -> ".join(str(l) for _, l in cyc + [nxt]))
+                    if msg not in seen_msgs:
+                        seen_msgs.add(msg)
+                        out.append(Finding("cdg-deadlock",
+                                           f"vc {nxt[0]}", msg))
+                elif c == 0 and nxt in adj:
+                    color[nxt] = 1
+                    stack.append((nxt, iter(adj[nxt])))
+                    path.append(nxt)
+                    advanced = True
+                    break
+                elif c == 0:
+                    color[nxt] = 2   # sink channel, no out-edges
+            if not advanced:
+                color[node] = 2
+                stack.pop()
+                path.pop()
+    return out
+
+
+# --------------------------------------------------------------------------- #
+# Collective algebra from contribs/delivers metadata
+# --------------------------------------------------------------------------- #
+def _phase_of_tag(tag: str) -> Optional[str]:
+    t = tag
+    for suffix in (":self", ":eject", ":root"):
+        if t.endswith(suffix):
+            t = t[: -len(suffix)]
+    if t in ("reduce", "ar:reduce", "gather") or t.startswith("rs["):
+        return "reduce"
+    if t in ("bcast", "ar:bcast") or t.startswith("ag["):
+        return "multicast"
+    return None
+
+
+def verify_collective(prog: Sequence, *, op: str,
+                      participants: Iterable, root=None,
+                      algorithm: str = "reduce_bcast",
+                      semantics: str = "ina") -> list[Finding]:
+    """Check a ``plan_collective`` program's algebra without running it:
+    fold-exactly-once per reduce chunk, deliver-exactly-once per multicast
+    destination, and end-to-end delivered-contribution completeness."""
+    parts = sorted(set(tuple(p) for p in participants))
+    pset = frozenset(parts)
+    root = parts[0] if root is None else tuple(root)
+    rs_ag = op == "allreduce" and algorithm == "rs_ag"
+    chunks = tuple(range(len(parts))) if rs_ag else (0,)
+    chunk_root = {c: (parts[c] if rs_ag else root) for c in chunks}
+    out: list[Finding] = []
+
+    groups: dict[tuple[str, int], list[int]] = {}
+    for i, o in enumerate(prog):
+        phase = _phase_of_tag(o.tag)
+        if phase is None:
+            out.append(Finding("collective-fold", f"op {i}",
+                               f"unrecognised collective tag {o.tag!r}"))
+            continue
+        groups.setdefault((phase, o.chunk), []).append(i)
+
+    # -- reduce phases: every participant's operand folded exactly once -- #
+    if op != "broadcast":
+        for c in chunks:
+            where = f"chunk {c}"
+            idxs = groups.get(("reduce", c), [])
+            if not idxs:
+                out.append(Finding("collective-fold", where,
+                                   "no reduce-phase ops for this chunk"))
+                continue
+            in_group = set(idxs)
+            first = Counter()
+            for i in idxs:
+                o = prog[i]
+                dep_sets = [prog[d].contribs for d in o.deps
+                            if d in in_group]
+                union = frozenset().union(*dep_sets) if dep_sets \
+                    else frozenset()
+                if sum(len(s) for s in dep_sets) != len(union):
+                    out.append(Finding(
+                        "collective-fold", f"op {i}",
+                        "merged dependency contributions overlap — an "
+                        "operand would be folded twice"))
+                if not union <= o.contribs:
+                    lost = sorted(union - o.contribs)
+                    out.append(Finding(
+                        "collective-fold", f"op {i}",
+                        f"contributions {lost} arriving via deps are "
+                        f"dropped by the merge"))
+                for p in sorted(o.contribs - union):
+                    first[p] += 1
+            for p in parts:
+                k = first.get(p, 0)
+                if k != 1:
+                    out.append(Finding(
+                        "collective-fold", where,
+                        f"participant {p} operand folded {k} times "
+                        f"(expected exactly once)"))
+            for p in sorted(set(first) - pset):
+                out.append(Finding("collective-fold", where,
+                                   f"non-participant {p} contributes"))
+            deliv = Counter()
+            for i in idxs:
+                for node in prog[i].delivers:
+                    deliv[node] += 1
+            r = chunk_root[c]
+            for node in sorted(set(deliv) - {r}):
+                out.append(Finding(
+                    "collective-deliver", where,
+                    f"reduce phase delivers to {node}; only the chunk "
+                    f"root {r} may receive it"))
+            got = deliv.get(r, 0)
+            # The gather-unicast lowering delivers the root one packet per
+            # participant by design; everything else is exactly-once.
+            if (got != 1 if op != "gather" else got < 1):
+                out.append(Finding(
+                    "collective-deliver", where,
+                    f"root {r} receives the reduced value {got} times"))
+
+    # -- multicast phases: every destination delivered exactly once ------ #
+    if op in ("broadcast", "allreduce"):
+        expected = frozenset({root}) if op == "broadcast" else pset
+        for c in chunks:
+            where = f"chunk {c}"
+            idxs = groups.get(("multicast", c), [])
+            if not idxs:
+                out.append(Finding("collective-deliver", where,
+                                   "no multicast-phase ops for this chunk"))
+                continue
+            deliv = Counter()
+            for i in idxs:
+                o = prog[i]
+                if o.contribs != expected:
+                    out.append(Finding(
+                        "collective-fold", f"op {i}",
+                        f"multicast payload carries contributions "
+                        f"{sorted(o.contribs)}, expected "
+                        f"{sorted(expected)}"))
+                for node in o.delivers:
+                    deliv[node] += 1
+            receivers = (pset - {chunk_root[c]}) or {chunk_root[c]}
+            for node in sorted(receivers):
+                k = deliv.get(node, 0)
+                if k != 1:
+                    out.append(Finding(
+                        "collective-deliver", where,
+                        f"destination {node} delivered {k} times "
+                        f"(expected exactly once)"))
+            for node in sorted(set(deliv) - set(receivers)):
+                out.append(Finding(
+                    "collective-deliver", where,
+                    f"unexpected multicast delivery to {node}"))
+
+    # -- end-to-end completeness ---------------------------------------- #
+    from repro.core.noc.collective.schedule import delivered_contribs
+    got = delivered_contribs(prog)
+
+    def want(node, chunk, contribs, role):
+        have = got.get(node, {}).get(chunk, frozenset())
+        if have != contribs:
+            out.append(Finding(
+                "collective-deliver", f"chunk {chunk}",
+                f"{role} {node} ends with contributions "
+                f"{sorted(have)}, expected {sorted(contribs)}"))
+
+    if op in ("reduce", "gather"):
+        want(root, 0, pset, "root")
+    elif op == "broadcast":
+        for p in parts:
+            if p != root or len(parts) == 1:
+                want(p, 0, frozenset({root}), "destination")
+    else:                                       # allreduce
+        for c in chunks:
+            for p in parts:
+                want(p, c, pset, "participant")
+    return out
+
+
+# --------------------------------------------------------------------------- #
+# Compiled programs: static-ledger conservation
+# --------------------------------------------------------------------------- #
+def verify_compiled(cp, prog: Optional[Sequence] = None,
+                    cfg: Optional[NocConfig] = None) -> list[Finding]:
+    """Check a CompiledProgram's flat encoding against itself and, when
+    the source PacketOps are given, against a fresh route derivation."""
+    out: list[Finding] = []
+    n = cp.n
+    if not (len(cp.ops) == len(cp.children) == len(cp.dep_count) == n):
+        out.append(Finding(
+            "ledger", "compiled",
+            f"array lengths disagree: n={n}, ops={len(cp.ops)}, "
+            f"children={len(cp.children)}, dep_count={len(cp.dep_count)}"))
+        return out
+    derived_children: list[list[int]] = [[] for _ in range(n)]
+    for i, top in enumerate(cp.ops):
+        deps = top[2]
+        if cp.dep_count[i] != len(deps):
+            out.append(Finding("dep-dag", f"op {i}",
+                               f"dep_count {cp.dep_count[i]} != "
+                               f"{len(deps)} encoded deps"))
+        for d in deps:
+            if not (isinstance(d, int) and 0 <= d < i):
+                out.append(Finding("dep-dag", f"op {i}",
+                                   f"dep {d!r} is not a prior op index"))
+            else:
+                derived_children[d].append(i)
+    for i in range(n):
+        if tuple(derived_children[i]) != tuple(cp.children[i]):
+            out.append(Finding(
+                "dep-dag", f"op {i}",
+                f"children {tuple(cp.children[i])} != "
+                f"{tuple(derived_children[i])} derived from dep edges"))
+    for i, top in enumerate(cp.ops):
+        flits, inject, eject = top[4], top[5], top[6]
+        n_links = len(top[7])
+        e = tuple(top[12])
+        # energy = (pe_adds, ni_flits, flit_routers, flit_links,
+        #           packet_hops, router_adds, packets_built)
+        shape = (e[0], e[1], flits * (n_links + 1), flits * n_links,
+                 n_links, e[5], int(inject) + int(eject))
+        if e != shape:
+            out.append(Finding(
+                "ledger", f"op {i}",
+                f"energy tuple {e} inconsistent with its own route "
+                f"({n_links} links, {flits} flits): expected {shape}"))
+        if e[1] < flits * (int(inject) + int(eject)) - 1e-9:
+            out.append(Finding(
+                "ledger", f"op {i}",
+                f"NI flits {e[1]} below the inject/eject floor "
+                f"{flits * (int(inject) + int(eject))}"))
+    if prog is None:
+        return out
+    if len(prog) != n:
+        out.append(Finding("ledger", "compiled",
+                           f"{n} compiled ops for {len(prog)} source ops"))
+        return out
+    cfg = NocConfig() if cfg is None else cfg
+    for i, (op, top) in enumerate(zip(prog, cp.ops)):
+        where = f"op {i}" + (f" [{op.tag}]" if op.tag else "")
+        if tuple(top[2]) != tuple(op.deps):
+            out.append(Finding("dep-dag", where,
+                               f"compiled deps {top[2]} != source "
+                               f"{tuple(op.deps)}"))
+        virtual = _is_virtual(op)
+        if top[3] != virtual:
+            out.append(Finding("ledger", where,
+                               f"virtual flag {top[3]} != {virtual}"))
+        want_links: tuple = ()
+        if not virtual:
+            strict, _ = _op_route(op, cfg.width, cfg.height)
+            if strict is None:
+                out.append(Finding(
+                    "route", where,
+                    f"source route {op.src}->{op.dst} is not encodable in "
+                    f"the {cfg.width}x{cfg.height} mesh, yet it compiled"))
+                continue
+            want_links = strict
+        if tuple(top[7]) != tuple(want_links):
+            out.append(Finding(
+                "ledger", where,
+                f"compiled link ids {top[7]} != {tuple(want_links)} "
+                f"re-derived from the route"))
+        nl = len(want_links)
+        want_e = (op.pe_adds,
+                  op.extra_ni_flits
+                  + op.flits * (int(op.inject) + int(op.eject)),
+                  op.flits * (nl + 1) if not virtual else 0,
+                  op.flits * nl,
+                  nl,
+                  op.reduce_words,
+                  int(op.inject) + int(op.eject))
+        if tuple(top[12]) != want_e:
+            out.append(Finding(
+                "ledger", where,
+                f"energy tuple {tuple(top[12])} != {want_e} recomputed "
+                f"from the source op's path-determined counts"))
+    return out
+
+
+# --------------------------------------------------------------------------- #
+# Mapper schedules
+# --------------------------------------------------------------------------- #
+def verify_schedule(sched, layers: Sequence,
+                    base_cfg: Optional[NocConfig] = None) -> list[Finding]:
+    """Re-emit every layer's packet program from a NetworkSchedule and
+    verify each one (routes, DAG, CDG) under its own NocConfig."""
+    base_cfg = NocConfig() if base_cfg is None else base_cfg
+    by_name = {l.name: l for l in layers}
+    out: list[Finding] = []
+    missing = [a.layer for a in sched.assignments if a.layer not in by_name]
+    for name in missing:
+        out.append(Finding("plan-gemm", f"schedule:{name}",
+                           "assignment references a layer not in the "
+                           "workload"))
+    if missing:
+        return out
+    for layer_name, cfg, prog in sched.programs(layers, base_cfg):
+        for f in verify_program(prog, cfg):
+            out.append(Finding(f.check, f"{layer_name}: {f.where}",
+                               f.message))
+    return out
+
+
+# --------------------------------------------------------------------------- #
+# Execution plans
+# --------------------------------------------------------------------------- #
+def verify_plan(plan, *, check_layers: bool = False) -> list[Finding]:
+    """ExecutionPlan invariants (structural; ``check_layers=True`` also
+    re-derives the model's GEMM layers, which imports jax)."""
+    from repro.core.noc.collective.cost import AUTO_CANDIDATES
+    from repro.plan.plan import plan_schema_hash
+    from repro.plan.tiles import VMEM_BUDGET_BYTES, tile_working_set
+    out: list[Finding] = []
+    where = f"plan {plan.key}"
+    current = plan_schema_hash()
+    if plan.schema != current:
+        out.append(Finding("plan-schema", where,
+                           f"schema hash {plan.schema} is stale "
+                           f"(current {current})"))
+    if plan.objective not in ("latency", "energy"):
+        out.append(Finding("plan-mode", where,
+                           f"unknown objective {plan.objective!r}"))
+    rank = {m: j for j, m in enumerate(AUTO_CANDIDATES)}
+    for d in plan.psum:
+        dwhere = f"{where} psum(p={d.p}, nbytes={d.nbytes})"
+        if d.mode not in AUTO_CANDIDATES:
+            out.append(Finding(
+                "plan-mode", dwhere,
+                f"resolved mode {d.mode!r} not in AUTO_CANDIDATES "
+                f"{AUTO_CANDIDATES}"))
+            continue
+        if d.p < 1 or d.nbytes < 0 or d.count < 1:
+            out.append(Finding("plan-mode", dwhere,
+                               "non-positive span/payload/count"))
+        if not d.costs:
+            continue
+        modes = tuple(m for m, _, _ in d.costs)
+        if modes != AUTO_CANDIDATES:
+            out.append(Finding(
+                "plan-mode", dwhere,
+                f"recorded cost candidates {modes} != AUTO_CANDIDATES"))
+            continue
+        col = 1 if plan.objective == "latency" else 2
+        best = min(d.costs, key=lambda row: (row[col], rank[row[0]]))[0]
+        if best != d.mode:
+            out.append(Finding(
+                "plan-mode", dwhere,
+                f"stored mode {d.mode!r} is not the {plan.objective} "
+                f"argmin of its recorded costs (that is {best!r})"))
+    for t in plan.tiles:
+        twhere = f"{where} tile({t.m}x{t.k}x{t.n}, {t.dtype})"
+        if min(t.bm, t.bn, t.bk) < 1:
+            out.append(Finding("plan-tile", twhere,
+                               f"non-positive block ({t.bm},{t.bn},{t.bk})"))
+            continue
+        if t.m % t.bm or t.n % t.bn or t.k % t.bk:
+            out.append(Finding(
+                "plan-tile", twhere,
+                f"blocks ({t.bm},{t.bn},{t.bk}) do not divide the GEMM "
+                f"dims (the kernel asserts exact divisibility)"))
+        ws = tile_working_set(t.bm, t.bn, t.bk, t.dtype)
+        if ws > VMEM_BUDGET_BYTES:
+            out.append(Finding(
+                "plan-tile", twhere,
+                f"working set {ws} bytes exceeds the VMEM budget "
+                f"{VMEM_BUDGET_BYTES}"))
+    if check_layers:
+        out.extend(_plan_layer_findings(plan))
+    return out
+
+
+def _plan_layer_findings(plan) -> list[Finding]:
+    from repro.configs import ARCHS
+    from repro.models.api import get_model
+    from repro.plan.plan import config_digest
+    where = f"plan {plan.key}"
+    cfg = ARCHS.get(plan.model)
+    if cfg is None:
+        return [Finding("plan-gemm", where,
+                        f"model {plan.model!r} not in the config registry")]
+    out: list[Finding] = []
+    if plan.config and plan.config != config_digest(cfg):
+        out.append(Finding(
+            "plan-schema", where,
+            "recorded config digest differs from the registry config "
+            "(plan was built from different model contents)"))
+        return out
+    layers = get_model(cfg).gemm_layers(plan.tokens)
+    by_name = {l.name: l for l in layers}
+    for g in plan.gemms:
+        gwhere = f"{where} gemm {g.layer}"
+        layer = by_name.get(g.layer)
+        if layer is None:
+            out.append(Finding("plan-gemm", gwhere,
+                               "verdict references a layer the model "
+                               "does not produce"))
+        elif (g.M, g.K, g.N) != (layer.M, layer.K, layer.N):
+            out.append(Finding(
+                "plan-gemm", gwhere,
+                f"verdict shape {(g.M, g.K, g.N)} != model layer shape "
+                f"{(layer.M, layer.K, layer.N)}"))
+    covered = {(t.m, t.k, t.n) for t in plan.tiles
+               if t.dtype == plan.dtype}
+    for layer in layers:
+        if (layer.M, layer.K, layer.N) not in covered:
+            out.append(Finding(
+                "plan-tile", f"{where} gemm {layer.name}",
+                f"no tile choice covers GEMM shape "
+                f"{(layer.M, layer.K, layer.N)} at dtype {plan.dtype}"))
+    return out
+
+
+# --------------------------------------------------------------------------- #
+# Paged-KV free list
+# --------------------------------------------------------------------------- #
+def verify_allocator(alloc) -> list[Finding]:
+    """BlockAllocator free-list invariants (static, host-only)."""
+    out: list[Finding] = []
+    nb = alloc.num_blocks
+    free = list(alloc._free)
+    for b in free:
+        if not (isinstance(b, int) and 0 <= b < nb):
+            out.append(Finding("kvcache", "free-list",
+                               f"free block id {b!r} out of range 0..{nb - 1}"))
+    dup_free = [b for b, k in Counter(free).items() if k > 1]
+    for b in sorted(dup_free):
+        out.append(Finding("kvcache", "free-list",
+                           f"block {b} appears {free.count(b)} times in "
+                           f"the free list"))
+    owner: dict[int, object] = {}
+    n_live = 0
+    for rid in sorted(alloc.tables, key=repr):
+        for b in alloc.tables[rid]:
+            n_live += 1
+            if not (isinstance(b, int) and 0 <= b < nb):
+                out.append(Finding("kvcache", f"table {rid!r}",
+                                   f"block id {b!r} out of range"))
+                continue
+            if b in owner:
+                out.append(Finding(
+                    "kvcache", f"table {rid!r}",
+                    f"block {b} aliased (also owned by {owner[b]!r})"))
+            owner[b] = rid
+    for b in sorted(set(free) & set(owner)):
+        out.append(Finding("kvcache", "free-list",
+                           f"block {b} is both free and mapped to "
+                           f"{owner[b]!r}"))
+    if n_live + len(free) != nb:
+        out.append(Finding(
+            "kvcache", "free-list",
+            f"leak: {n_live} live + {len(free)} free != {nb} total"))
+    return out
+
+
+def verify_kvcache(kv) -> list[Finding]:
+    """PagedKVCache bookkeeping on top of the allocator invariants."""
+    out = verify_allocator(kv.allocator)
+    tables = set(kv.allocator.tables)
+    for name, keys in (("state", set(kv._state)),
+                       ("length", set(kv._length))):
+        if keys != tables:
+            only = sorted(keys ^ tables, key=repr)
+            out.append(Finding(
+                "kvcache", name,
+                f"{name} keys disagree with block tables (difference: "
+                f"{only})"))
+    for rid in sorted(kv._length, key=repr):
+        length = kv._length[rid]
+        if length < 0 or length > kv.max_seq:
+            out.append(Finding("kvcache", f"request {rid!r}",
+                               f"length {length} outside 0..{kv.max_seq}"))
+            continue
+        table = kv.allocator.tables.get(rid, ())
+        need = kv.blocks_for(length)
+        if need > len(table):
+            out.append(Finding(
+                "kvcache", f"request {rid!r}",
+                f"length {length} needs {need} blocks but the table "
+                f"holds {len(table)}"))
+    return out
+
+
+# --------------------------------------------------------------------------- #
+# Hook entry
+# --------------------------------------------------------------------------- #
+def check_program(prog: Sequence, cfg: Optional[NocConfig] = None,
+                  **collective_kw) -> None:
+    """Raise :class:`VerificationError` if ``prog`` has any finding.
+
+    Used by the opt-in hooks (``engine.run_program(verify=True)``); pass
+    collective metadata (``op=``, ``participants=``, ...) to also run the
+    algebraic checks."""
+    findings = verify_program(prog, cfg)
+    if collective_kw:
+        findings += verify_collective(prog, **collective_kw)
+    if findings:
+        raise VerificationError(findings)

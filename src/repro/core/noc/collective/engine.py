@@ -47,7 +47,7 @@ class ProgramResult:
 
 def run_program(prog: Sequence[PacketOp], cfg: Optional[NocConfig] = None,
                 *, sim: Optional[NocSim] = None, t0: int = 0,
-                engine: str = "auto") -> ProgramResult:
+                engine: str = "auto", verify: bool = False) -> ProgramResult:
     """Execute ``prog`` on ``sim`` (or a fresh simulator) and return the
     makespan, per-op completion times, and the energy ledger.
 
@@ -55,8 +55,13 @@ def run_program(prog: Sequence[PacketOp], cfg: Optional[NocConfig] = None,
     compiled flat-array path when possible (bit-identical, no per-op
     closures), ``"heap"`` forces the ground-truth engine below.  A caller
     supplied ``sim`` always uses the heap engine (the caller owns the
-    simulator's ledger and resource state).
+    simulator's ledger and resource state).  ``verify=True`` runs the
+    static checks (``repro.analysis``: DAG/route/CDG) first and raises
+    ``VerificationError`` instead of simulating a broken program.
     """
+    if verify:
+        from repro.analysis.verify import check_program
+        check_program(prog, cfg)
     if sim is None and engine == "auto" and compiled_enabled():
         try:
             cp = compile_program(prog, cfg if cfg is not None else NocConfig())

@@ -46,7 +46,7 @@ class CollectiveTree:
 
     def children(self) -> dict[Coord, list[Coord]]:
         """Child lists (deterministic order: sorted by coordinate)."""
-        out: dict[Coord, list[Coord]] = {v: [] for v in self.nodes}
+        out: dict[Coord, list[Coord]] = {v: [] for v in sorted(self.nodes)}
         for child, par in sorted(self.parent.items()):
             out[par].append(child)
         return out
@@ -74,7 +74,7 @@ class CollectiveTree:
         nodes = self.nodes
         assert self.root in nodes
         assert self.root not in self.parent, "root must have no parent"
-        for p in self.participants:
+        for p in sorted(self.participants):
             assert p in nodes, f"participant {p} not reached"
         for v in self.parent:
             seen = {v}

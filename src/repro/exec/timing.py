@@ -1,0 +1,31 @@
+"""The sanctioned wall-clock path for progress reporting.
+
+Modules under the determinism contract (``core/noc``, ``plan``, ``serve``,
+``mapper`` — see ``repro.analysis.lint``) must not read the wall clock:
+a timestamp that leaks into an artifact breaks byte-reproducibility, and
+the lint's ``wall-clock`` rule flags the call sites.  Human-facing
+*duration* reporting (stdout progress lines, ``info`` dicts the CLIs
+print) is still wanted, so it routes through :class:`Stopwatch` here —
+``exec/`` is outside the lint scope precisely because this module is the
+one place clock access is concentrated and auditable.  Keep Stopwatch
+readings out of persisted artifacts.
+"""
+from __future__ import annotations
+
+import time
+
+
+class Stopwatch:
+    """Monotonic duration meter: ``Stopwatch().seconds`` since creation."""
+
+    __slots__ = ("_t0",)
+
+    def __init__(self) -> None:
+        self._t0 = time.perf_counter()
+
+    @property
+    def seconds(self) -> float:
+        return time.perf_counter() - self._t0
+
+    def round(self, ndigits: int = 2) -> float:
+        return round(self.seconds, ndigits)

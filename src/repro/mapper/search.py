@@ -174,13 +174,18 @@ def search_network(workload: str, layers: Sequence[LayerShape],
                    mcfg: MapperConfig = MapperConfig(),
                    base_cfg: NocConfig = NocConfig(),
                    baseline_mapping: Mapping = PAPER_MAPPING,
-                   jobs: int = 1) -> SearchOutcome:
+                   jobs: int = 1, debug: bool = False) -> SearchOutcome:
     """Search the mapping space for a whole network; emit the best schedule.
 
     Deterministic: same (layers, mcfg, base_cfg) -> identical outcome,
     whatever ``jobs`` is — hardware points are scored across a process
     pool (:mod:`repro.exec.pool`) and merged back in candidate order, and
     every scored cost is a pure function of the plan shape.
+
+    ``debug=True`` statically verifies the winning schedule's re-emitted
+    packet programs (``repro.analysis.verify_schedule``: routes, DAG, CDG
+    deadlock freedom) and raises ``VerificationError`` on any finding
+    before the outcome escapes.
     """
     cache_before = SIM_CACHE.stats()
     stats = {"candidates": 0, "simulated": 0, "hardware_evaluated": 0}
@@ -221,6 +226,12 @@ def search_network(workload: str, layers: Sequence[LayerShape],
     cache_after = SIM_CACHE.stats()
     stats["sim_misses"] = cache_after["misses"] - cache_before["misses"]
     stats["sim_hits"] = cache_after["hits"] - cache_before["hits"]
+    if debug:
+        from repro.analysis.findings import VerificationError
+        from repro.analysis.verify import verify_schedule
+        findings = verify_schedule(best, layers, base_cfg)
+        if findings:
+            raise VerificationError(findings)
     return SearchOutcome(workload=workload, baseline=baseline, best=best,
                          pareto=tuple(_pareto(schedules + [baseline])),
                          stats=stats)

@@ -26,6 +26,7 @@ from pathlib import Path
 from typing import Optional
 
 from repro.configs.base import ModelConfig
+from repro.exec.timing import Stopwatch
 
 from .plan import ExecutionPlan, plan_key, plan_schema_hash
 
@@ -81,8 +82,6 @@ def plan_for_launch(cfg: ModelConfig, mesh, shape, psum_mode: str,
     """
     if psum_mode != "auto" or not enabled:
         return None, None
-    import time
-
     from repro.core.noc.collective.cost import COST_STATS
     from repro.core.noc.simcache import SIM_CACHE
     if SIM_CACHE._persist_dir is None:
@@ -92,11 +91,11 @@ def plan_for_launch(cfg: ModelConfig, mesh, shape, psum_mode: str,
         SIM_CACHE.persist(SIM_CACHE.persist_default_dir())
     store = PlanStore(plan_dir)
     runs0 = COST_STATS["engine_runs"]
-    t0 = time.time()
+    watch = Stopwatch()
     plan, built = store.get_or_build(cfg, mesh, launch_phase(shape),
                                      shape=shape, **build_kwargs)
     info = {"key": plan.key, "from_store": not built,
-            "plan_s": round(time.time() - t0, 2),
+            "plan_s": watch.round(2),
             "collective_sims": COST_STATS["engine_runs"] - runs0,
             "psum": plan.psum_summary()}
     if verbose:
@@ -110,11 +109,16 @@ def plan_for_launch(cfg: ModelConfig, mesh, shape, psum_mode: str,
 class PlanStore:
     """Directory of schema-guarded ``ExecutionPlan`` JSON files."""
 
-    def __init__(self, dir_path: Optional[str | Path] = None) -> None:
+    def __init__(self, dir_path: Optional[str | Path] = None, *,
+                 verify: bool = False) -> None:
         self.dir = Path(dir_path) if dir_path is not None \
             else Path(default_plan_dir())
         self.loads = 0
         self.builds = 0
+        #: Opt-in hook: statically verify every loaded plan
+        #: (``repro.analysis.verify_plan``) and raise on findings instead
+        #: of serving a structurally invalid plan warm.
+        self.verify = verify
 
     def path_for(self, key: str) -> Path:
         return self.dir / f"{key}.json"
@@ -131,6 +135,12 @@ class PlanStore:
             plan = ExecutionPlan.from_dict(doc)
         except (KeyError, TypeError, ValueError):
             return None
+        if self.verify:
+            from repro.analysis.findings import VerificationError
+            from repro.analysis.verify import verify_plan
+            findings = verify_plan(plan)
+            if findings:
+                raise VerificationError(findings)
         self.loads += 1
         return plan
 

@@ -64,6 +64,19 @@ def _block(dim: int, target: int, align: int) -> int:
     return fallback
 
 
+def tile_working_set(bm: int, bn: int, bk: int, dtype: str) -> int:
+    """VMEM bytes one grid step holds for blocks ``(bm, bn, bk)``:
+    double-buffered streamed x/w blocks plus the resident f32 accumulator
+    and the output tile.  Shared by :func:`choose_tiles` and the static
+    plan verifier (``repro.analysis.verify_plan``) so both sides price the
+    same formula.
+    """
+    itemsize = jnp.dtype(dtype).itemsize
+    stream = (bm * bk + bk * bn) * itemsize * 2         # double-buffered
+    resident = bm * bn * 4 + bm * bn * itemsize         # acc + out tile
+    return stream + resident
+
+
 def choose_tiles(m: int, k: int, n: int, dtype: str = "bfloat16",
                  vmem_budget: int = VMEM_BUDGET_BYTES,
                  ) -> tuple[int, int, int]:
@@ -74,17 +87,10 @@ def choose_tiles(m: int, k: int, n: int, dtype: str = "bfloat16",
     budget: ``bm*bk + bk*bn`` input bytes (double-buffered) plus the
     ``bm*bn`` f32 accumulator and output tile.
     """
-    itemsize = jnp.dtype(dtype).itemsize
     sublane = _MIN_SUBLANE.get(str(dtype), 8)
     bm = _block(m, _TARGET_M, 128 if m >= 128 else sublane)
     bn = _block(n, _TARGET_N, 128)
     bk = _block(k, _TARGET_K, 128)
-
-    def working_set(bk_: int) -> int:
-        stream = (bm * bk_ + bk_ * bn) * itemsize * 2   # double-buffered
-        resident = bm * bn * 4 + bm * bn * itemsize     # acc + out tile
-        return stream + resident
-
-    while working_set(bk) > vmem_budget and bk > 1:
+    while tile_working_set(bm, bn, bk, dtype) > vmem_budget and bk > 1:
         bk = _block(k, bk // 2, 128 if bk > 128 else 1)
     return bm, bn, bk

@@ -25,9 +25,10 @@ from __future__ import annotations
 import argparse
 import json
 import os
-import time
+from pathlib import Path
 
 from repro.configs import ARCHS
+from repro.exec.timing import Stopwatch
 
 _ENGINE_EXCLUDED = ("encdec", "vlm")
 
@@ -98,9 +99,9 @@ def run_engine_demo(cfg, seed: int, n: int) -> dict:
                          vocab=rc.vocab, prefix="e")
     eng = ServingEngine(rc, slots=2, max_seq=rc.max_seq, block_size=8,
                         prefill_chunk=4, check=True)
-    t0 = time.time()
+    watch = Stopwatch()
     report = eng.run(reqs)
-    wall = time.time() - t0
+    wall = watch.seconds
     print(f"[serve] engine demo: {len(reqs)} requests, "
           f"{report.iterations} iterations, {report.decode_steps} decode "
           f"steps, {report.prefill_chunks} prefill chunks, "
@@ -171,7 +172,7 @@ def main(argv=None) -> int:
                       prefill_chunk=args.prefill_chunk, cost=cost,
                       policy=args.policy)
     slo_s = args.slo_p99_ms / 1e3
-    t0 = time.time()
+    watch = Stopwatch()
     if args.search_fleet:
         from repro.serve.cluster import search_fleet
         answer = search_fleet(requests, slo_s, metric=args.slo_metric,
@@ -183,7 +184,7 @@ def main(argv=None) -> int:
         print(f"[serve] fleet answer: {fleet_str} instance(s) for p99 "
               f"{args.slo_metric} <= {args.slo_p99_ms} ms "
               f"({len(answer['searched'])} sizes simulated, "
-              f"{time.time()-t0:.1f}s)")
+              f"{watch.seconds:.1f}s)")
     else:
         from repro.serve.cluster import ClusterSimulator
         metrics = ClusterSimulator(args.fleet, **sim_kwargs).run(requests)
@@ -193,7 +194,7 @@ def main(argv=None) -> int:
                      "metrics": metrics, "slo_met": bool(met <= slo_s)}
         print(f"[serve] fleet {args.fleet}: p99 {args.slo_metric} "
               f"{met*1e3:.2f} ms (SLO {args.slo_p99_ms} ms) "
-              f"in {time.time()-t0:.1f}s")
+              f"in {watch.seconds:.1f}s")
     if metrics:
         print(f"[serve] throughput {metrics['throughput_rps']:.2f} req/s "
               f"{metrics['throughput_tok_s']:.1f} tok/s | "
@@ -219,9 +220,9 @@ def main(argv=None) -> int:
     out = args.out or os.path.join(
         "results", "serve", f"serve_{args.arch}_seed{args.seed}.json")
     os.makedirs(os.path.dirname(out) or ".", exist_ok=True)
-    with open(out, "w") as fh:
-        json.dump(doc, fh, indent=1, sort_keys=True)
-        fh.write("\n")
+    from repro.core.noc.simcache import atomic_write_text
+    atomic_write_text(Path(out),
+                      json.dumps(doc, indent=1, sort_keys=True) + "\n")
     print(f"[serve] wrote {out}")
     return 0
 

@@ -75,7 +75,7 @@ class BlockAllocator:
         if rid not in self.tables:      # check before popping: a failed
             raise KeyError(             # extend must not leak free blocks
                 f"request {rid!r} has no block table to extend")
-        if not self.can_alloc(n):
+        if n < 0 or not self.can_alloc(n):
             raise MemoryError(
                 f"need {n} more blocks, {len(self._free)} free")
         new = [self._free.pop() for _ in range(n)]
@@ -90,13 +90,16 @@ class BlockAllocator:
         return len(blocks)
 
     def check(self) -> None:
-        """Assert the no-alias / no-leak invariants."""
-        live = [b for t in self.tables.values() for b in t]
-        assert len(live) == len(set(live)), "block aliased across requests"
-        assert len(live) + len(self._free) == self.num_blocks, \
-            f"leak: {len(live)} live + {len(self._free)} free " \
-            f"!= {self.num_blocks}"
-        assert not (set(live) & set(self._free)), "block both live and free"
+        """Raise on any no-alias / no-leak violation.
+
+        Delegates to the static verifier (``repro.analysis``) so the CLI
+        and this runtime guard agree on one invariant set; raises
+        ``AssertionError`` (explicitly — not a bare ``assert``, so the
+        check survives ``python -O``)."""
+        from repro.analysis.verify import verify_allocator
+        findings = verify_allocator(self)
+        if findings:
+            raise AssertionError("; ".join(str(f) for f in findings))
 
 
 @dataclasses.dataclass(frozen=True)
@@ -249,4 +252,9 @@ class PagedKVCache:
                     f"for request {rid!r}")
 
     def check(self) -> None:
-        self.allocator.check()
+        """Allocator invariants plus the paged bookkeeping (state/length
+        keys match block tables, lengths covered); see kvcache check()."""
+        from repro.analysis.verify import verify_kvcache
+        findings = verify_kvcache(self)
+        if findings:
+            raise AssertionError("; ".join(str(f) for f in findings))

@@ -1,0 +1,381 @@
+"""Static-analysis layer (DESIGN.md S13): artifact verifier + determinism lint.
+
+Coverage map (ISSUE 7):
+
+* the shared corpora verify clean — every tree collective (both semantics x
+  both allreduce algorithms x three participant shapes) and every distinct
+  quick fig7-12 WS plan shape, source + compiled;
+* seeded-mutation property tests: one mutation per defect class on a valid
+  program/plan and the verifier flags exactly that class — dropped dep edge
+  / duplicated contrib -> ``collective-fold``, diagonal route step ->
+  ``route``, forward dep -> ``dep-dag``, cyclic path-override ring ->
+  ``cdg-deadlock`` (and the XY-routed twin stays clean), tampered energy ->
+  ``ledger``, stale schema -> ``plan-schema``, non-argmin mode ->
+  ``plan-mode``, free-list corruption -> ``kvcache``;
+* the opt-in hooks: ``run_program(verify=True)``, ``PlanStore(verify=True)``
+  raising on a tampered stored plan, ``search_network(debug=True)``,
+  ``BlockAllocator.check()``;
+* per-rule lint units on scoped snippets (incl. pragma suppression and the
+  determinism-scope boundary) and the acceptance gate: ``lint src/`` has
+  zero findings inside the pragma budget;
+* CLI smoke for both subcommands and the findings-JSON artifact.
+"""
+import copy
+import json
+from pathlib import Path
+from textwrap import dedent
+
+import pytest
+
+from repro.analysis import (VerificationError, check_program, lint_paths,
+                            verify_allocator, verify_collective,
+                            verify_compiled, verify_plan, verify_program)
+from repro.analysis.corpus import collective_programs, ws_programs
+from repro.analysis.lint import count_pragmas, lint_file
+from repro.analysis.verify import _phase_of_tag
+from repro.core.noc.collective.engine import run_program
+from repro.core.noc.collective.schedule import PacketOp, plan_collective
+from repro.core.noc.compiled import compile_program
+from repro.core.noc.router import NocConfig
+from repro.plan import ExecutionPlan, PlanStore, PsumDecision
+
+SRC = Path(__file__).resolve().parent.parent / "src"
+CFG4 = NocConfig(n=4)
+
+
+def _checks(findings):
+    return {f.check for f in findings}
+
+
+def _allreduce():
+    parts = [(x, y) for x in range(4) for y in range(4)]
+    prog = plan_collective("allreduce", parts, 512.0, CFG4)
+    return parts, copy.deepcopy(prog)
+
+
+def _first_ws_program():
+    shape, cfg, prog = next(iter(ws_programs(quick=True)))
+    return cfg, copy.deepcopy(prog)
+
+
+# --------------------------------------------------------------------------- #
+# Valid corpora are clean
+# --------------------------------------------------------------------------- #
+def test_collective_corpus_verifies_clean():
+    n = 0
+    for case, cfg, prog in collective_programs():
+        n += 1
+        assert verify_program(prog, cfg) == [], case
+        assert verify_collective(
+            prog, op=case["op"], participants=case["participants"],
+            algorithm=case["algorithm"], semantics=case["semantics"]) == [], \
+            case
+    assert n == 30          # 3 shapes x (3 ops + 2 allreduce algos) x 2 sems
+
+
+def test_ws_corpus_verifies_clean_through_compile():
+    for shape, cfg, prog in ws_programs(quick=True):
+        assert verify_program(prog, cfg) == [], shape
+        cp = compile_program(prog, cfg)
+        assert verify_compiled(cp, prog, cfg) == [], shape
+
+
+# --------------------------------------------------------------------------- #
+# Seeded mutations: each defect class flagged, and only that class
+# --------------------------------------------------------------------------- #
+def test_mutation_dropped_dep_edge_flags_fold():
+    parts, prog = _allreduce()
+    pick = None
+    for i, o in enumerate(prog):
+        if _phase_of_tag(o.tag) != "reduce" or not o.deps:
+            continue
+        for d in o.deps:
+            od = prog[d]
+            if (_phase_of_tag(od.tag) == "reduce" and od.chunk == o.chunk
+                    and od.contribs and od.contribs < o.contribs):
+                pick = (i, d)
+                break
+        if pick:
+            break
+    assert pick, "corpus program has no droppable reduce dep"
+    i, d = pick
+    prog[i].deps = tuple(x for x in prog[i].deps if x != d)
+    findings = verify_collective(prog, op="allreduce", participants=parts)
+    assert _checks(findings) == {"collective-fold"}
+    assert verify_program(prog, CFG4) == []      # DAG/routes still legal
+
+
+def test_mutation_duplicated_contrib_flags_fold():
+    parts, prog = _allreduce()
+    reduce_ops = [i for i, o in enumerate(prog)
+                  if _phase_of_tag(o.tag) == "reduce" and o.contribs]
+    donor = next(i for i in reduce_ops if len(prog[i].contribs) >= 1)
+    p = min(prog[donor].contribs)
+    victim = next(i for i in reduce_ops
+                  if i != donor and prog[i].chunk == prog[donor].chunk
+                  and p not in prog[i].contribs)
+    prog[victim].contribs = prog[victim].contribs | {p}
+    findings = verify_collective(prog, op="allreduce", participants=parts)
+    assert findings and _checks(findings) == {"collective-fold"}
+    assert any(str(p) in f.message for f in findings)
+
+
+def test_mutation_diagonal_route_step_flags_route():
+    cfg, prog = _first_ws_program()
+    i = next(i for i, o in enumerate(prog)
+             if o.flits > 0 and abs(o.src[0] - o.dst[0])
+             + abs(o.src[1] - o.dst[1]) >= 2)
+    prog[i].path = [tuple(prog[i].src), tuple(prog[i].dst)]   # non-unit step
+    findings = verify_program(prog, cfg)
+    assert _checks(findings) == {"route"}
+    assert f"op {i}" in findings[0].where
+
+
+def test_mutation_forward_dep_flags_dag_and_hook_raises():
+    cfg, prog = _first_ws_program()
+    prog[0].deps = (len(prog) - 1,)               # forward edge: not a DAG
+    assert "dep-dag" in _checks(verify_program(prog, cfg))
+    with pytest.raises(VerificationError) as exc:
+        check_program(prog, cfg)
+    assert any(f.check == "dep-dag" for f in exc.value.findings)
+    with pytest.raises(VerificationError):
+        run_program(prog, cfg, verify=True)
+
+
+def test_mutation_tampered_energy_flags_ledger():
+    parts, prog = _allreduce()
+    cp = compile_program(prog, CFG4)
+    i = next(i for i, o in enumerate(prog) if o.flits > 0)
+    prog[i].pe_adds += 1                          # compiled ledger now stale
+    findings = verify_compiled(cp, prog, CFG4)
+    assert findings and _checks(findings) == {"ledger"}
+
+
+def _ring_ops(paths):
+    return [PacketOp(src=p[0], dst=p[-1], flits=2, path=list(p), tag="mut")
+            for p in paths]
+
+
+def test_mutation_cyclic_overrides_flag_cdg_deadlock():
+    # Four turning path overrides on one vc whose channel dependencies form
+    # a ring around a 2x2 block: E(0,0) -> N(1,0) -> W(1,1) -> S(0,1) -> E.
+    ring = _ring_ops([
+        [(0, 0), (1, 0), (1, 1)],
+        [(1, 0), (1, 1), (0, 1)],
+        [(1, 1), (0, 1), (0, 0)],
+        [(0, 1), (0, 0), (1, 0)],
+    ])
+    cfg = NocConfig(n=2)
+    findings = verify_program(ring, cfg)
+    assert _checks(findings) == {"cdg-deadlock"}
+    assert "cycle" in findings[0].message
+    # The same src->dst pairs under plain XY routing are acyclic (the
+    # Dally/Seitz turn restriction XY embodies): no finding.
+    for op in ring:
+        op.path = None
+    assert verify_program(ring, cfg) == []
+
+
+def test_valid_program_runs_with_verify_hook():
+    parts, prog = _allreduce()
+    res = run_program(prog, CFG4, verify=True)
+    assert res.latency_cycles > 0
+
+
+# --------------------------------------------------------------------------- #
+# Plan mutations + the PlanStore verify-on-load hook
+# --------------------------------------------------------------------------- #
+def _tiny_plan(**over):
+    psum = (PsumDecision(
+        p=4, nbytes=1024, mode="ina", ops=("psum",), count=3,
+        costs=(("ina", 100, 50.0), ("ina_ring", 120, 40.0),
+               ("eject_inject", 130, 60.0))),)
+    base = dict(model="qwen2-1.5b", mesh=(("data", 4), ("model", 4)),
+                phase="decode", dtype="bfloat16", objective="latency",
+                psum=psum)
+    base.update(over)
+    return ExecutionPlan(**base)
+
+
+def test_mutation_stale_schema_flags_plan_schema():
+    import dataclasses
+    assert verify_plan(_tiny_plan()) == []
+    stale = dataclasses.replace(_tiny_plan(), schema="0" * 16)
+    assert _checks(verify_plan(stale)) == {"plan-schema"}
+
+
+def test_mutation_non_argmin_mode_flags_plan_mode():
+    import dataclasses
+    plan = _tiny_plan()
+    bad = dataclasses.replace(
+        plan, psum=(dataclasses.replace(plan.psum[0],
+                                        mode="eject_inject"),))
+    assert "plan-mode" in _checks(verify_plan(bad))
+
+
+def test_plan_store_verify_on_load(tmp_path):
+    store = PlanStore(tmp_path, verify=True)
+    plan = _tiny_plan()
+    path = store.save(plan)
+    assert store.load(plan.key) == plan           # valid plan loads verified
+    doc = json.loads(path.read_text())
+    doc["psum"][0]["mode"] = "eject_inject"       # not the costed argmin
+    path.write_text(json.dumps(doc))
+    with pytest.raises(VerificationError):
+        store.load(plan.key)
+    assert PlanStore(tmp_path).load(plan.key) is not None   # opt-in only
+
+
+def test_search_debug_hook_verifies_winning_schedule():
+    from repro.core.workloads import mapper_workloads
+    from repro.mapper.search import search_network
+    from repro.mapper.space import QUICK_MAPPER
+    layers = mapper_workloads(conv=("alexnet",), transformers=())["alexnet"]
+    outcome = search_network("alexnet", layers, QUICK_MAPPER, debug=True)
+    assert outcome.best.latency_cycles <= outcome.baseline.latency_cycles
+
+
+# --------------------------------------------------------------------------- #
+# KV-cache free-list invariants
+# --------------------------------------------------------------------------- #
+def test_kvcache_mutations_flagged_and_check_raises():
+    from repro.serve.kvcache import BlockAllocator
+    alloc = BlockAllocator(8)
+    alloc.alloc("a", 3)
+    assert verify_allocator(alloc) == []
+    alloc.check()                                 # clean: no raise
+
+    aliased = BlockAllocator(8)
+    aliased.alloc("a", 3)
+    aliased.tables["b"] = [aliased.tables["a"][0]]     # cross-table alias
+    findings = verify_allocator(aliased)
+    assert findings and _checks(findings) == {"kvcache"}
+    with pytest.raises(AssertionError):
+        aliased.check()
+
+    leaked = BlockAllocator(8)
+    leaked.alloc("a", 3)
+    leaked._free.append(leaked.tables["a"][0])         # free AND mapped
+    assert "kvcache" in _checks(verify_allocator(leaked))
+
+    ranged = BlockAllocator(8)
+    ranged._free.append(99)                            # out-of-range id
+    assert "kvcache" in _checks(verify_allocator(ranged))
+
+
+def test_kvcache_failed_extend_does_not_leak():
+    from repro.serve.kvcache import BlockAllocator
+    alloc = BlockAllocator(4)
+    alloc.alloc("a", 2)
+    for bad in (-1, 99):
+        with pytest.raises(MemoryError):
+            alloc.extend("a", bad)
+        assert verify_allocator(alloc) == []      # invariants survive failure
+
+
+# --------------------------------------------------------------------------- #
+# Determinism lint: per-rule units, pragma + scope mechanics
+# --------------------------------------------------------------------------- #
+def _lint_snippet(tmp_path, code, rel="repro/plan/mod.py"):
+    f = tmp_path / rel
+    f.parent.mkdir(parents=True, exist_ok=True)
+    f.write_text(dedent(code))
+    return lint_file(f)
+
+
+def test_lint_unseeded_random(tmp_path):
+    findings = _lint_snippet(tmp_path, """\
+        import random
+        import numpy as np
+        x = random.random()
+        r = random.Random(7)
+        g = np.random.default_rng(0)
+        h = np.random.default_rng()
+        """)
+    assert [(f.check, int(f.where.rsplit(":", 1)[1])) for f in findings] == \
+        [("unseeded-random", 3), ("unseeded-random", 6)]
+
+
+def test_lint_wall_clock_and_scope(tmp_path):
+    code = """\
+        import time
+        from time import perf_counter
+        t0 = time.time()
+        t1 = perf_counter()
+        """
+    hits = _lint_snippet(tmp_path, code)
+    assert [f.check for f in hits] == ["wall-clock", "wall-clock"]
+    # experiments/ report wall time by design: outside the rule's scope.
+    assert _lint_snippet(tmp_path, code, rel="repro/experiments/m.py") == []
+
+
+def test_lint_set_iteration(tmp_path):
+    findings = _lint_snippet(tmp_path, """\
+        s = {1, 2, 3}
+        for x in s:                  # flagged
+            print(x)
+        for x in sorted(s):          # sorted: fine
+            print(x)
+        items = list(s)              # flagged
+        keep = {x for x in s}        # set comprehension: set in, set out
+        total = sum(x for x in s)    # order-insensitive reducer
+        """, rel="anywhere/mod.py")
+    assert [(f.check, int(f.where.rsplit(":", 1)[1])) for f in findings] == \
+        [("set-iteration", 2), ("set-iteration", 6)]
+
+
+def test_lint_mutable_default_and_non_atomic_write(tmp_path):
+    findings = _lint_snippet(tmp_path, """\
+        from pathlib import Path
+        def f(acc=[]):
+            return acc
+        def g(acc=None):
+            return acc
+        def dump(p, text):
+            with open(p, "w") as fh:
+                fh.write(text)
+            Path(p).write_text(text)
+        data = open("x").read()
+        """)
+    assert [(f.check, int(f.where.rsplit(":", 1)[1])) for f in findings] == \
+        [("mutable-default", 2), ("non-atomic-write", 7),
+         ("non-atomic-write", 9)]
+
+
+def test_lint_pragma_suppresses_only_named_rule(tmp_path):
+    assert _lint_snippet(tmp_path, """\
+        import time
+        t = time.time()   # lint: allow(wall-clock)
+        """) == []
+    wrong = _lint_snippet(tmp_path, """\
+        import time
+        t = time.time()   # lint: allow(set-iteration)
+        """)
+    assert [f.check for f in wrong] == ["wall-clock"]
+
+
+def test_lint_src_zero_findings_within_pragma_budget():
+    assert lint_paths([SRC]) == []
+    assert count_pragmas([SRC]) <= 5
+
+
+# --------------------------------------------------------------------------- #
+# CLI smoke
+# --------------------------------------------------------------------------- #
+def test_cli_verify_and_lint(tmp_path, capsys):
+    from repro.analysis.__main__ import main
+    out = tmp_path / "findings.json"
+    assert main(["verify", "--sections", "kvcache",
+                 "--json", str(out)]) == 0
+    doc = json.loads(out.read_text())
+    assert doc["count"] == 0 and doc["command"] == "verify"
+
+    bad = tmp_path / "repro" / "plan" / "bad.py"
+    bad.parent.mkdir(parents=True)
+    bad.write_text("import time\nt = time.time()\n")
+    assert main(["lint", str(bad), "--json", str(out)]) == 1
+    doc = json.loads(out.read_text())
+    assert doc["count"] == 1
+    assert doc["findings"][0]["check"] == "wall-clock"
+    assert main(["lint", str(SRC)]) == 0
+    capsys.readouterr()
