@@ -1,0 +1,77 @@
+"""Mesh-of-meshes layer: what does the hierarchy sweep cost, and how much
+of it do the caches absorb?
+
+Three measurements (DESIGN.md S14):
+
+* **cost-facade sweep** — ``repro.experiments.run_hierarchy`` (the
+  ``--section hierarchy`` CLI body) timed twice in-process: the second
+  pass answers from the lru/SIM_CACHE layers the facade rides, so the
+  ratio is the warm-sweep speedup a persistent store delivers across
+  processes too;
+* **engine replay** — every schedule of the shared hierarchy corpus
+  (``repro.analysis.corpus.hier_schedules``) planned and replayed through
+  ``run_hier_schedule`` on both engines (the ground truth the facade's
+  numbers are pinned against in tests);
+* **static verify** — ``verify_hier_schedule`` over the same corpus (the
+  ``verify --sections hierarchy`` CI path).
+
+Returns ``(csv lines, perf dict)``; ``benchmarks/run.py --sections
+hierarchy`` lands the perf dict in the ``BENCH_<n>.json`` snapshot.
+"""
+import time
+
+
+def run(quick: bool = False) -> tuple[list[str], dict]:
+    from repro.analysis.corpus import hier_schedules
+    from repro.analysis.verify import verify_hier_schedule
+    from repro.core.noc.hierarchy import run_hier_schedule
+    from repro.experiments.sweeps import (DEFAULT_SWEEP, QUICK_SWEEP,
+                                          run_hierarchy)
+
+    sweep = QUICK_SWEEP if quick else DEFAULT_SWEEP
+
+    t0 = time.time()
+    fig = run_hierarchy(sweep)
+    sweep_s = time.time() - t0
+    rows = len(fig["rows"])
+
+    t0 = time.time()
+    refig = run_hierarchy(sweep)
+    resweep_s = time.time() - t0
+    strip = lambda r: {k: v for k, v in r.items() if k != "elapsed_us"}  # noqa: E731
+    assert [strip(r) for r in fig["rows"]] == \
+           [strip(r) for r in refig["rows"]], "warm re-sweep changed rows"
+
+    corpus = list(hier_schedules(quick=quick))
+    t0 = time.time()
+    for _case, sched in corpus:
+        fast = run_hier_schedule(sched)
+        slow = run_hier_schedule(sched, engine="heap")
+        assert fast.latency_cycles == slow.latency_cycles
+    engine_s = time.time() - t0
+
+    t0 = time.time()
+    findings = 0
+    for _case, sched in corpus:
+        findings += len(verify_hier_schedule(sched))
+    verify_s = time.time() - t0
+    assert findings == 0, f"{findings} finding(s) on the valid corpus"
+
+    n = len(corpus)
+    perf = {
+        "rows": rows, "quick": quick,
+        "sweep_s": sweep_s, "resweep_s": resweep_s,
+        "resweep_x": sweep_s / max(resweep_s, 1e-9),
+        "schedules": n, "engine_s": engine_s, "verify_s": verify_s,
+        "headline": fig["headline"],
+    }
+    lines = [
+        f"hier_sweep,{sweep_s * 1e6 / max(rows, 1):.0f},rows={rows}",
+        f"hier_resweep,{resweep_s * 1e6 / max(rows, 1):.0f},rows={rows};"
+        f"x_cold={perf['resweep_x']:.1f}",
+        f"hier_engine,{engine_s * 1e6 / max(n, 1):.0f},schedules={n};"
+        f"both_engines=1",
+        f"hier_verify,{verify_s * 1e6 / max(n, 1):.0f},schedules={n};"
+        f"findings=0",
+    ]
+    return lines, perf

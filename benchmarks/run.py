@@ -80,6 +80,13 @@ def _serve(args):
     return lines
 
 
+def _hierarchy(args):
+    from benchmarks import bench_hierarchy
+    lines, perf = bench_hierarchy.run(quick=args.quick)
+    _PERF["hierarchy"] = perf
+    return lines
+
+
 def _roofline(args):
     if not os.path.exists("results/dryrun_singlepod.json"):
         return ["roofline_skipped,0,run_launch/dryrun_first"]
@@ -105,6 +112,7 @@ SECTIONS = {
     "plan": _plan,
     "serve": _serve,
     "analysis": _analysis,
+    "hierarchy": _hierarchy,
     "roofline": _roofline,
 }
 

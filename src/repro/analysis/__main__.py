@@ -2,11 +2,13 @@
 
 Two subcommands (EXPERIMENTS.md has the full walkthrough):
 
-``verify [--sections collectives,ws,schedules,plans,kvcache]``
+``verify [--sections collectives,ws,hierarchy,schedules,plans,kvcache]``
     Statically verify the repo's artifacts without running the event
     loop: every tree collective (both semantics x both allreduce
     algorithms over three participant shapes), every distinct fig7-12
     WS plan shape (source program + compiled lowering + ``replicate``),
+    every hierarchical collective of the mesh-of-meshes corpus
+    (chip-boundary routes, per-level fold-exactly-once, two-level CDG),
     quick-search mapper schedules, every persisted ExecutionPlan
     (``--plan-dir``; ``--build-plans`` populates the store for all
     (config x phase) cells first), and a deterministic paged-KV
@@ -24,8 +26,9 @@ import sys
 
 from .findings import Finding, dump_findings
 from .lint import count_pragmas, lint_paths
-from .verify import (verify_collective, verify_compiled, verify_plan,
-                     verify_program, verify_schedule)
+from .verify import (verify_collective, verify_compiled,
+                     verify_hier_schedule, verify_plan, verify_program,
+                     verify_schedule)
 
 #: All (config x phase) plan cells ``verify --build-plans`` covers.
 PLAN_MESH = (("data", 16), ("model", 16))
@@ -75,6 +78,23 @@ def _section_ws(args) -> tuple[int, list]:
         fs += verify_compiled(cp.replicate(3))
         findings += [Finding(f.check, f"{where}: {f.where}", f.message)
                      for f in fs]
+    return checked, findings
+
+
+def _section_hierarchy(args) -> tuple[int, list]:
+    """Hierarchy invariants (DESIGN.md S14) over the mesh-of-meshes
+    corpus: chip-boundary route legality, per-level fold-exactly-once,
+    and CDG deadlock freedom over the two-level channel graph."""
+    from .corpus import hier_schedules
+    findings: list = []
+    checked = 0
+    for case, sched in hier_schedules(quick=args.quick):
+        checked += 1
+        cx, cy = case["grid"]
+        where = (f"hier {cx}x{cy}/{case['package']}/{case['op']}/"
+                 f"{case['semantics']}/{case['algorithm']}")
+        findings += [Finding(f.check, f"{where}: {f.where}", f.message)
+                     for f in verify_hier_schedule(sched)]
     return checked, findings
 
 
@@ -184,6 +204,7 @@ def _section_kvcache(args) -> tuple[int, list]:
 _SECTIONS = {
     "collectives": _section_collectives,
     "ws": _section_ws,
+    "hierarchy": _section_hierarchy,
     "schedules": _section_schedules,
     "plans": _section_plans,
     "kvcache": _section_kvcache,

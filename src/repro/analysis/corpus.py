@@ -54,6 +54,45 @@ def collective_programs(cfg: Optional[NocConfig] = None,
         yield case, cfg, prog
 
 
+#: package grids the hierarchy corpus sweeps (quick keeps the smallest).
+HIER_GRIDS = ((2, 1), (2, 2))
+HIER_GRIDS_QUICK = ((2, 1),)
+PACKAGE_VARIANTS = ("mesh", "express")
+
+
+def hier_cases(quick: bool = False) -> Iterator[dict]:
+    """Every hierarchical collective the verifier must hold: package grid
+    x package variant x op x semantics x (allreduce algorithm)."""
+    from repro.core.noc.hierarchy import HIER_OPS
+    grids = HIER_GRIDS_QUICK if quick else HIER_GRIDS
+    for grid in grids:
+        for package in PACKAGE_VARIANTS:
+            for op in HIER_OPS:
+                for semantics in SEMANTICS:
+                    algorithms = ALLREDUCE_ALGORITHMS \
+                        if op == "allreduce" else ("reduce_bcast",)
+                    for algorithm in algorithms:
+                        yield {"grid": grid, "package": package, "op": op,
+                               "semantics": semantics,
+                               "algorithm": algorithm}
+
+
+def hier_schedules(quick: bool = False, cfg: Optional[NocConfig] = None,
+                   payload_bits: float = 4096.0) -> Iterator[tuple]:
+    """``(case, schedule)`` for every :func:`hier_cases` entry."""
+    from repro.core.noc.hierarchy import (HierarchicalMesh,
+                                          plan_hier_collective)
+    cfg = NocConfig(n=4) if cfg is None else cfg
+    for case in hier_cases(quick):
+        hmesh = HierarchicalMesh(chips_x=case["grid"][0],
+                                 chips_y=case["grid"][1],
+                                 package=case["package"])
+        sched = plan_hier_collective(
+            case["op"], hmesh, payload_bits, cfg,
+            algorithm=case["algorithm"], semantics=case["semantics"])
+        yield case, sched
+
+
 def ws_plan_shapes(quick: bool = False,
                    cfg: Optional[NocConfig] = None) -> list[dict]:
     """Every distinct fig7-12 per-layer plan shape.

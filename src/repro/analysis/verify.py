@@ -58,8 +58,8 @@ Coord = tuple
 
 __all__ = [
     "verify_program", "verify_collective", "verify_compiled",
-    "verify_schedule", "verify_plan", "verify_allocator", "verify_kvcache",
-    "check_program",
+    "verify_schedule", "verify_hier_schedule", "verify_plan",
+    "verify_allocator", "verify_kvcache", "check_program",
 ]
 
 
@@ -463,6 +463,180 @@ def verify_schedule(sched, layers: Sequence,
         for f in verify_program(prog, cfg):
             out.append(Finding(f.check, f"{layer_name}: {f.where}",
                                f.message))
+    return out
+
+
+# --------------------------------------------------------------------------- #
+# Hierarchical schedules (mesh-of-meshes, DESIGN.md S14)
+# --------------------------------------------------------------------------- #
+#: Level name -> the collective op its chip lanes run.
+_HIER_LEVEL_OPS = {"intra-reduce": "reduce", "intra-bcast": "broadcast"}
+
+
+def _hier_lane_meta(prog: Sequence, op: str):
+    """Derive ``(participants, root)`` from a lane program's metadata.
+
+    Participants come from the contribution algebra the planners stamp on
+    every op; the root is whoever the reduce phase delivers (broadcast
+    lanes: whoever the payload's single contribution names)."""
+    contrib_union: frozenset = frozenset()
+    deliver_union: frozenset = frozenset()
+    reduce_delivers: list = []
+    for o in prog:
+        contrib_union |= frozenset(o.contribs)
+        deliver_union |= frozenset(o.delivers)
+        if _phase_of_tag(o.tag) == "reduce":
+            reduce_delivers.extend(o.delivers)
+    if op == "broadcast":
+        parts = sorted(deliver_union | contrib_union)
+        root = sorted(contrib_union)[0] if contrib_union else \
+            (parts[0] if parts else None)
+    else:
+        parts = sorted(contrib_union)
+        root = reduce_delivers[0] if reduce_delivers else \
+            (parts[0] if parts else None)
+    return parts, root
+
+
+def _verify_express_lane(lane, hmesh) -> tuple[list[Finding], list]:
+    """Route legality of an express package lane + its CDG chains.
+
+    Express channels are dedicated 2-node chip-root links: every routed op
+    must carry a ``[src, dst]`` path override between valid chip-grid
+    coordinates (that is what the heap engine resolves to per-channel
+    overflow resources; anything else would alias on-die links)."""
+    out: list[Finding] = []
+    chains: list = []
+    cx, cy = hmesh.chips_x, hmesh.chips_y
+    width, height = lane.cfg.width, lane.cfg.height
+    for i, o in enumerate(lane.prog):
+        where = f"op {i}" + (f" [{o.tag}]" if o.tag else "")
+        for d in o.deps:
+            if not (isinstance(d, int) and 0 <= d < i):
+                out.append(Finding(
+                    "dep-dag", where,
+                    f"dep {d!r} is not a prior op index"))
+        if _is_virtual(o):
+            continue
+        for node in (tuple(o.src), tuple(o.dst)):
+            if not (0 <= node[0] < cx and 0 <= node[1] < cy):
+                out.append(Finding(
+                    "hier-route", where,
+                    f"{node} is not a chip coordinate of the "
+                    f"{cx}x{cy} package grid"))
+        if tuple(o.src) == tuple(o.dst):
+            continue                     # root-local fold/eject, no channel
+        p = tuple(tuple(n) for n in o.path) if o.path is not None else None
+        if p is None or len(p) != 2 or p[0] != tuple(o.src) \
+                or p[-1] != tuple(o.dst):
+            out.append(Finding(
+                "hier-route", where,
+                f"express package op {o.src}->{o.dst} must ride a "
+                f"dedicated 2-node channel (path override [src, dst]), "
+                f"got {p}"))
+            continue
+        _, mixed, _ = path_link_ids(width, height, p)
+        chains.append((("package", None, o.vc), mixed))
+    return out, chains
+
+
+def verify_hier_schedule(sched) -> list[Finding]:
+    """Hierarchy invariants for a ``HierarchicalSchedule`` (DESIGN.md S14).
+
+    ``hier-route``
+        Chip-boundary legality: intra-chip lanes route strictly inside
+        their chip's W x H mesh, mesh-package lanes inside the CX x CY
+        chip grid, and express package lanes only over dedicated 2-node
+        chip-root channels with valid chip-grid endpoints.
+    ``hier-fold``
+        Per-level fold-exactly-once: each chip lane folds its own
+        participants exactly once into the chip root, the package level
+        folds exactly the set of chips that produced partials (and
+        broadcast levels deliver exactly the chips that continue
+        intra-chip) — a dropped or duplicated chip lane is an algebra
+        error, not a performance detail.
+    ``cdg-deadlock``
+        Deadlock freedom over the two-level channel graph: channels are
+        namespaced per (scope, chip), so concurrent chip lanes cannot
+        alias each other's links and package channels never alias on-die
+        wires.
+    """
+    out: list[Finding] = []
+    hmesh = sched.hmesh
+    chains: list = []
+    lane_meta: dict = {}                 # (level, label) -> (parts, root)
+    for level, lane in sched.all_lanes():
+        where = f"{level.name}/{lane.label}"
+        express_pkg = lane.scope == "package" and hmesh.package == "express"
+        if express_pkg:
+            fs, lane_chains = _verify_express_lane(lane, hmesh)
+            chains.extend(lane_chains)
+        else:
+            # A lane is an ordinary flat program under its own config;
+            # out-of-mesh coords ARE chip-boundary violations here.  CDG
+            # findings are dropped — the namespaced two-level pass below
+            # covers them without double reporting.
+            fs = [Finding("hier-route" if f.check == "route" else f.check,
+                          f.where, f.message)
+                  for f in verify_program(lane.prog, lane.cfg)
+                  if f.check != "cdg-deadlock"]
+            ns = (lane.scope, lane.chip)
+            for o in lane.prog:
+                if _is_virtual(o):
+                    continue
+                strict, _ = _op_route(o, lane.cfg.width, lane.cfg.height)
+                if strict is not None:
+                    chains.append(((*ns, o.vc), strict))
+        out.extend(Finding(f.check, f"{where}: {f.where}", f.message)
+                   for f in fs)
+
+        # per-lane fold/deliver algebra
+        lane_op = sched.op if level.name in ("flat", "package") \
+            else _HIER_LEVEL_OPS.get(level.name)
+        if lane_op not in ("reduce", "broadcast", "allreduce", "gather"):
+            continue
+        parts, root = _hier_lane_meta(lane.prog, lane_op)
+        lane_meta[(level.name, lane.label)] = (parts, root, lane.chip)
+        if not parts:
+            out.append(Finding("hier-fold", where,
+                               "lane carries no contribution metadata"))
+            continue
+        algorithm = sched.algorithm
+        if express_pkg:
+            algorithm = "reduce_bcast"   # the star degenerates rs_ag
+        fs = verify_collective(lane.prog, op=lane_op, participants=parts,
+                               root=root, algorithm=algorithm,
+                               semantics=sched.semantics)
+        out.extend(Finding("hier-fold", f"{where}: {f.where}", f.message)
+                   for f in fs)
+
+    # cross-level consistency: the package level must fold/deliver exactly
+    # the chips whose lanes produced partials / continue the broadcast.
+    if len(sched.levels) > 1:
+        pkg = next((m for (lv, _), m in lane_meta.items()
+                    if lv == "package"), None)
+        if pkg is not None:
+            pkg_chips = sorted(tuple(p) for p in pkg[0])
+            for lv_name in ("intra-reduce", "intra-bcast"):
+                lanes = [(label, m) for (lv, label), m in lane_meta.items()
+                         if lv == lv_name]
+                if not lanes:
+                    continue
+                intra = sorted(hmesh.chip_coord(m[2]) for _, m in lanes)
+                if intra != pkg_chips:
+                    out.append(Finding(
+                        "hier-fold", f"{lv_name}<->package",
+                        f"intra level covers chips {intra} but the "
+                        f"package level names {pkg_chips} — a chip's "
+                        f"partial would be dropped or double-counted"))
+                for label, (parts, root, chip) in lanes:
+                    if root != hmesh.chip_root_xy:
+                        out.append(Finding(
+                            "hier-fold", f"{lv_name}/{label}",
+                            f"chip lane root {root} is not the chip root "
+                            f"{hmesh.chip_root_xy} fronting the package "
+                            f"link"))
+    out.extend(_cdg_findings(chains))
     return out
 
 

@@ -38,9 +38,42 @@ Coord = tuple[int, int]
 #: Direction codes for the 4 outgoing links of a node (E, W, S, N).
 _DIRS = {(1, 0): 0, (-1, 0): 1, (0, 1): 2, (0, -1): 3}
 
-#: (width, height, src, dst) / (width, height, path) -> (link_ids, links);
-#: ``link_ids`` is None when any hop is not an in-mesh unit step.
+#: Per-mesh-shape link-id memo: ``(width, height) -> {(src, dst) | path:
+#: (strict_ids, mixed_ids, links)}``.  Keying per shape keeps a multi-chip
+#: hierarchy sweep (many shapes alive at once: chip meshes, package grids)
+#: from evicting the flat mesh's hot set, and gives per-shape derivation
+#: stats the hierarchy regression tests assert on.  Each shape's table is
+#: FIFO-bounded at :data:`LINK_ID_CACHE_MAX` entries.
 _LINK_ID_CACHE: dict = {}
+
+#: Per-shape observability: ``(width, height) -> {"derived", "evicted"}``.
+LINK_ID_STATS: dict = {}
+
+LINK_ID_CACHE_MAX = 1 << 15
+
+
+def _shape_cache(width: int, height: int) -> dict:
+    shape = (width, height)
+    cache = _LINK_ID_CACHE.get(shape)
+    if cache is None:
+        cache = _LINK_ID_CACHE[shape] = {}
+        LINK_ID_STATS.setdefault(shape, {"derived": 0, "evicted": 0})
+    return cache
+
+
+def _shape_put(width: int, height: int, cache: dict, key, value):
+    stats = LINK_ID_STATS[(width, height)]
+    stats["derived"] += 1
+    cache[key] = value
+    while len(cache) > LINK_ID_CACHE_MAX:
+        del cache[next(iter(cache))]          # FIFO: dict keeps insert order
+        stats["evicted"] += 1
+    return value
+
+
+def clear_link_caches() -> None:
+    """Drop every shape's link-id table (stats are cumulative)."""
+    _LINK_ID_CACHE.clear()
 
 
 def encode_links_mixed(links, width: int, height: int) -> tuple:
@@ -73,21 +106,26 @@ def route_link_ids(width: int, height: int, src: Coord, dst: Coord):
     W x H mesh.  ``strict_ids`` is None when any hop is unencodable (the
     compiled engine falls back to heap); ``mixed_ids`` always resolves,
     per link, to either a flat index or an overflow key."""
-    key = (width, height, src, dst)
-    hit = _LINK_ID_CACHE.get(key)
+    cache = _shape_cache(width, height)
+    key = (src, dst)
+    hit = cache.get(key)
     if hit is None:
-        hit = _encode_entry(route_links(src, dst), width, height)
-        _LINK_ID_CACHE[key] = hit
+        hit = _shape_put(width, height, cache, key,
+                         _encode_entry(route_links(src, dst), width, height))
     return hit
 
 
 def path_link_ids(width: int, height: int, path: tuple[Coord, ...]):
     """Memoized ``(strict_ids, mixed_ids, links)`` of a path override."""
-    key = (width, height, path)
-    hit = _LINK_ID_CACHE.get(key)
+    cache = _shape_cache(width, height)
+    # Tagged key: a two-node override (src, dst) must not alias the XY
+    # route entry for the same endpoints (express links are non-XY).
+    key = ("path", path)
+    hit = cache.get(key)
     if hit is None:
-        hit = _encode_entry(tuple(zip(path[:-1], path[1:])), width, height)
-        _LINK_ID_CACHE[key] = hit
+        hit = _shape_put(
+            width, height, cache, key,
+            _encode_entry(tuple(zip(path[:-1], path[1:])), width, height))
     return hit
 
 

@@ -7,15 +7,47 @@ per packet dominated ``enqueue`` before PR 4 (DESIGN.md S10).  The
 uncached derivations stay exposed (``xy_route_uncached``) as the ground
 truth the regression tests compare against; ``ROUTE_STATS`` counts actual
 derivations so tests can assert repeated enqueues never re-derive.
+
+The memo tables are *bounded* (FIFO eviction at :data:`ROUTE_CACHE_MAX`
+entries, counted in ``ROUTE_STATS["evicted"]``) and clearable
+(:func:`clear_route_caches`): multi-chip hierarchy sweeps enqueue
+thousands of distinct (src, dst) pairs per chip shape, and the pre-PR-8
+unbounded ``lru_cache`` grew without limit across a long sweep.  Flat
+8x8-mesh pairs (the hot set) stay resident — the hierarchy regression in
+``tests/test_hierarchy.py`` pins that a multi-chip sweep re-derives zero
+warm flat-mesh routes.
 """
 from __future__ import annotations
 
 from dataclasses import dataclass
-from functools import lru_cache
 from typing import Optional
 
-#: Incremented once per *derived* (not cache-served) route.
-ROUTE_STATS = {"derived": 0}
+#: ``derived`` increments once per *derived* (not cache-served) route;
+#: ``evicted`` once per FIFO eviction from a full cache.
+ROUTE_STATS = {"derived": 0, "evicted": 0}
+
+#: Per-table entry bound.  32k (src, dst) pairs cover a 180-node mesh's
+#: full pair set; bigger sweeps recycle cold entries FIFO.
+ROUTE_CACHE_MAX = 1 << 15
+
+_ROUTE_CACHE: dict = {}
+_LINK_CACHE: dict = {}
+
+
+def clear_route_caches() -> None:
+    """Drop every memoized route/link tuple (stats are cumulative)."""
+    _ROUTE_CACHE.clear()
+    _LINK_CACHE.clear()
+
+
+def route_cache_sizes() -> dict[str, int]:
+    return {"routes": len(_ROUTE_CACHE), "links": len(_LINK_CACHE)}
+
+
+def _trim(cache: dict) -> None:
+    while len(cache) > ROUTE_CACHE_MAX:
+        del cache[next(iter(cache))]          # FIFO: dicts keep insert order
+        ROUTE_STATS["evicted"] += 1
 
 
 @dataclass(frozen=True)
@@ -69,11 +101,15 @@ def xy_route_uncached(src: tuple[int, int],
     return path
 
 
-@lru_cache(maxsize=None)
 def xy_route_tuple(src: tuple[int, int],
                    dst: tuple[int, int]) -> tuple[tuple[int, int], ...]:
     """Memoized XY route as an immutable tuple (safe to share)."""
-    return tuple(xy_route_uncached(src, dst))
+    key = (src, dst)
+    hit = _ROUTE_CACHE.get(key)
+    if hit is None:
+        hit = _ROUTE_CACHE[key] = tuple(xy_route_uncached(src, dst))
+        _trim(_ROUTE_CACHE)
+    return hit
 
 
 def xy_route(src: tuple[int, int], dst: tuple[int, int]) -> list[tuple[int, int]]:
@@ -81,12 +117,16 @@ def xy_route(src: tuple[int, int], dst: tuple[int, int]) -> list[tuple[int, int]
     return list(xy_route_tuple(src, dst))
 
 
-@lru_cache(maxsize=None)
 def route_links(src: tuple[int, int], dst: tuple[int, int],
                 ) -> tuple[tuple[tuple[int, int], tuple[int, int]], ...]:
     """Memoized directed links of the XY route (the ``enqueue`` hot path)."""
-    path = xy_route_tuple(src, dst)
-    return tuple(zip(path[:-1], path[1:]))
+    key = (src, dst)
+    hit = _LINK_CACHE.get(key)
+    if hit is None:
+        path = xy_route_tuple(src, dst)
+        hit = _LINK_CACHE[key] = tuple(zip(path[:-1], path[1:]))
+        _trim(_LINK_CACHE)
+    return hit
 
 
 def yx_route(src: tuple[int, int], dst: tuple[int, int]) -> list[tuple[int, int]]:

@@ -217,9 +217,8 @@ def clear_compiled_caches() -> None:
     _WINDOW_PROGRAMS.clear()
     _ROUND_PROGRAMS.clear()
     _plan.cache_clear()
-    simulator._LINK_ID_CACHE.clear()
-    topology.xy_route_tuple.cache_clear()
-    topology.route_links.cache_clear()
+    simulator.clear_link_caches()
+    topology.clear_route_caches()
 
 
 def _compiled_window(key: tuple, cfg: NocConfig, mode: str, window: int,

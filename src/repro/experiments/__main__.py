@@ -45,6 +45,13 @@ def main(argv: list[str] | None = None) -> int:
                     help="override the mesh-size sweep")
     ap.add_argument("--workloads", default=None,
                     help="comma-separated subset of alexnet,vgg16,resnet50")
+    ap.add_argument("--pe-budget", type=int, default=None, metavar="P",
+                    help="mapper section: per-chip W*H*E PE ceiling "
+                         "(default: the space's own budget, 64)")
+    ap.add_argument("--chips", type=_int_tuple, default=None,
+                    metavar="C1,C2,..",
+                    help="mapper section: package-replication axis, e.g. "
+                         "1,2,4 (default 1 = flat mesh; DESIGN.md S14)")
     ap.add_argument("--no-cache", action="store_true",
                     help="bypass the plan-keyed window cache (ground truth)")
     ap.add_argument("--jobs", type=int, default=None, metavar="N",
@@ -81,6 +88,14 @@ def main(argv: list[str] | None = None) -> int:
             ap.error(f"unknown workloads {unknown}; "
                      f"pick from {sorted(WORKLOADS)}")
         overrides["workloads"] = workloads
+    if args.pe_budget is not None:
+        if args.pe_budget < 1:
+            ap.error("--pe-budget must be >= 1")
+        overrides["mapper_pe_budget"] = args.pe_budget
+    if args.chips is not None:
+        if not args.chips or min(args.chips) < 1:
+            ap.error("--chips needs at least one positive value")
+        overrides["mapper_chips"] = args.chips
     if args.jobs is not None:
         from repro.exec import default_jobs
         if args.jobs < 0:

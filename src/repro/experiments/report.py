@@ -15,6 +15,17 @@ def _ratio_table(rows: list[dict], extra_cols: tuple[str, ...] = ()) -> str:
     return "\n".join([head, rule] + body)
 
 
+def _hierarchy_table(rows: list[dict]) -> str:
+    head = ("| N | payload (Kbit) | chips | package | width ratio | "
+            "INA cycles | latency_x | energy_x |")
+    rule = "|---|---|---|---|---|---|---|---|"
+    body = [(f"| {r['n']} | {r['payload_bits'] / 1024:g} | {r['chips']} | "
+             f"{r['package']} | {r['pkg_width_ratio']} | "
+             f"{r['ina_latency_cycles']} | {r['latency_x']:.3f} | "
+             f"{r['energy_x']:.3f} |") for r in rows]
+    return "\n".join([head, rule] + body)
+
+
 def _mapper_table(rows: list[dict]) -> str:
     head = ("| workload | layers | best hw (WxHxE) | latency_x | energy_x | "
             "util (paper -> auto) |")
@@ -115,6 +126,15 @@ def summary_markdown(results: dict) -> str:
     if fig:
         parts += [f"## mesh_scaling — {fig['paper_reference']}", "",
                   _ratio_table(fig["rows"], extra_cols=("n",)), ""]
+    fig = results.get("hierarchy")
+    if fig:
+        parts += [f"## hierarchy — {fig['paper_reference']}", "",
+                  _hierarchy_table(fig["rows"]), "",
+                  "Whole-package allreduce over every PE; ratios are "
+                  "eject/inject over INA, so a row > 1 means the paper's "
+                  "advantage survives that chip count and package-link "
+                  "speed (`package=flat` rows are the single-chip paper "
+                  "mesh; see DESIGN.md S14).", ""]
     fig = results.get("mapper")
     if fig:
         parts += [f"## mapper — {fig['paper_reference']}", "",

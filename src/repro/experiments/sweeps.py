@@ -39,6 +39,8 @@ PAPER_REFERENCE = {
     "fig7_9": "paper: up to 1.22x latency / 2.16x power, WS+INA vs WS",
     "fig10_12": "paper: up to 1.19x latency / 2.16x power, WS+INA vs OS",
     "mesh_scaling": "beyond the paper: N x E scaling of the WS+INA gain",
+    "hierarchy": "beyond the paper: mesh-of-meshes — the INA advantage vs "
+                 "chip count and package-link bandwidth (DESIGN.md S14)",
     "mapper": "beyond the paper: searched mappings vs the fixed "
               "Eq. (1)-(4) placement (DESIGN.md S9)",
     "plan": "beyond the paper: whole-model ExecutionPlans — NoC-costed "
@@ -48,8 +50,8 @@ PAPER_REFERENCE = {
              "advantage as meshes-per-SLO (DESIGN.md S12)",
 }
 
-SECTIONS = ("tables", "fig7_9", "fig10_12", "mesh_scaling", "mapper", "plan",
-            "serve")
+SECTIONS = ("tables", "fig7_9", "fig10_12", "mesh_scaling", "hierarchy",
+            "mapper", "plan", "serve")
 
 
 @dataclass(frozen=True)
@@ -62,10 +64,23 @@ class SweepConfig:
     sim_rounds: int = 16                        # simulated window length
     workloads: tuple[str, ...] = ("alexnet", "vgg16", "resnet50")
     jobs: int = 1                               # process-pool width (--jobs)
+    # ---- hierarchy section (DESIGN.md S14) -------------------------------
+    #: (chip-mesh N, allreduce payload bits) points — large configs where
+    #: the package level actually carries weight.
+    hier_configs: tuple[tuple[int, int], ...] = (
+        (8, 1 << 20), (16, 1 << 20), (16, 1 << 22))
+    hier_chips: tuple[int, ...] = (1, 2, 4, 8)  # chips per package
+    #: on-die/package link-width ratios (1 = same-width interposer wires,
+    #: 4 = package links carry a quarter flit per beat) — the bandwidth
+    #: axis; per-hop latency stays at the 4-cycle interposer default.
+    hier_pkg_widths: tuple[int, ...] = (1, 2, 4)
+    hier_packages: tuple[str, ...] = ("mesh", "express")
     # ---- mapper section (DESIGN.md S9) -----------------------------------
     mapper_space: str = "full"                  # "full" | "quick" MapperConfig
     mapper_transformers: tuple[str, ...] = ("llama3-8b", "qwen2-1.5b")
     mapper_tokens: int = 256                    # GEMM M tile per pass
+    mapper_pe_budget: Optional[int] = None      # per-chip PE ceiling override
+    mapper_chips: tuple[int, ...] = (1,)        # package axis (--chips)
     # ---- plan section (DESIGN.md S11) ------------------------------------
     plan_phases: tuple[str, ...] = ("train", "prefill", "decode")
     plan_mesh: tuple[tuple[str, int], ...] = (("data", 16), ("model", 16))
@@ -98,6 +113,8 @@ DEFAULT_SWEEP = SweepConfig()
 #: CI smoke shape: small windows, two E points, no N=16 mesh.
 QUICK_SWEEP = SweepConfig(e_list=(1, 4), n_list=(4, 8), sim_rounds=4,
                           workloads=("alexnet", "vgg16", "resnet50"),
+                          hier_configs=((4, 1 << 14),), hier_chips=(1, 2),
+                          hier_pkg_widths=(4,),
                           mapper_space="quick", plan_phases=("decode",),
                           serve_archs=("qwen2-1.5b",), serve_qps=(0.1,),
                           serve_fleets=(1, 2), serve_requests=60)
@@ -172,6 +189,80 @@ def run_mesh_scaling(sweep: SweepConfig = DEFAULT_SWEEP) -> dict:
             "sim_rounds": sweep.sim_rounds, "rows": rows}
 
 
+def run_hierarchy(sweep: SweepConfig = DEFAULT_SWEEP) -> dict:
+    """Hierarchy section: the INA advantage on a mesh-of-meshes
+    (DESIGN.md S14).
+
+    For every ``(chip-mesh N, payload)`` point in ``sweep.hier_configs``,
+    prices a whole-package allreduce over ``sweep.hier_chips`` chips,
+    both package fabrics, and ``sweep.hier_pkg_widths`` package-link
+    width ratios (the bandwidth axis: a ratio of 4 means cross-chip
+    links carry a quarter of the on-die flit per beat) — under both
+    collective semantics through
+    :func:`~repro.core.noc.hierarchy.hier_collective_cost` (the same
+    SIM_CACHE-riding facade the plan builder and mapper use).
+    ``latency_x``/``energy_x`` are eject/inject over INA, so the rows read
+    as *how much of the paper's advantage survives the package level* as
+    chips multiply and the cross-chip links narrow.
+    """
+    import dataclasses as _dc
+
+    from repro.core.noc.hierarchy import (hier_collective_cost,
+                                          square_hier_mesh)
+
+    rows = []
+    for n, payload_bits in sweep.hier_configs:
+        cfg = sweep.cfg(n)
+        for chips in sweep.hier_chips:
+            # chips == 1 is the flat paper mesh: no package level exists,
+            # so the fabric/width axes would emit duplicate rows.
+            variants = [("flat", 1)] if chips == 1 else \
+                [(pkg, wr) for pkg in sweep.hier_packages
+                 for wr in sweep.hier_pkg_widths]
+            for package, width_ratio in variants:
+                t0 = time.time()
+                hmesh = square_hier_mesh(
+                    chips, n, n,
+                    package=package if chips > 1 else "mesh")
+                hmesh = _dc.replace(
+                    hmesh,
+                    pkg_flit_bits=max(1, cfg.flit_bits // width_ratio))
+                costs = {sem: hier_collective_cost(
+                            "allreduce", hmesh, float(payload_bits), cfg,
+                            semantics=sem)
+                         for sem in ("ina", "eject_inject")}
+                ina, ej = costs["ina"], costs["eject_inject"]
+                rows.append({
+                    "n": n, "payload_bits": payload_bits, "chips": chips,
+                    "package": package, "pkg_width_ratio": width_ratio,
+                    "pes": ina.participants,
+                    "ina_latency_cycles": ina.latency_cycles,
+                    "ej_latency_cycles": ej.latency_cycles,
+                    "latency_x": ej.latency_cycles / ina.latency_cycles,
+                    "ina_energy_pj": ina.energy_pj,
+                    "ej_energy_pj": ej.energy_pj,
+                    "energy_x": ej.energy_pj / ina.energy_pj,
+                    "ina_level_latency": [list(l) for l
+                                          in ina.level_latency],
+                    "elapsed_us": (time.time() - t0) * 1e6,
+                })
+    # Headline per package fabric: the INA advantage at the largest swept
+    # chip count and narrowest link (the "does it survive scale-out"
+    # answer).
+    headline = {}
+    for package in ("flat",) + tuple(sweep.hier_packages):
+        sub = [r for r in rows if r["package"] == package]
+        if sub:
+            worst = max(sub, key=lambda r: (r["chips"],
+                                            r["pkg_width_ratio"], r["n"]))
+            headline[package] = {k: worst[k] for k in
+                                 ("n", "chips", "pkg_width_ratio",
+                                  "latency_x", "energy_x")}
+    return {"figure": "hierarchy",
+            "paper_reference": PAPER_REFERENCE["hierarchy"],
+            "rows": rows, "headline": headline}
+
+
 def run_mapper(sweep: SweepConfig = DEFAULT_SWEEP) -> dict:
     """Mapper section: paper-fixed vs auto-searched mapping, per workload.
 
@@ -190,7 +281,11 @@ def run_mapper(sweep: SweepConfig = DEFAULT_SWEEP) -> dict:
     from repro.mapper import MapperConfig, QUICK_MAPPER, search_network
 
     base = QUICK_MAPPER if sweep.mapper_space == "quick" else MapperConfig()
-    mcfg = _dc.replace(base, sim_rounds=sweep.sim_rounds)
+    space_overrides = {"sim_rounds": sweep.sim_rounds,
+                       "chips_list": sweep.mapper_chips}
+    if sweep.mapper_pe_budget is not None:
+        space_overrides["pe_budget"] = sweep.mapper_pe_budget
+    mcfg = _dc.replace(base, **space_overrides)
     workloads = mapper_workloads(conv=sweep.workloads,
                                  transformers=sweep.mapper_transformers,
                                  tokens=sweep.mapper_tokens)
@@ -222,6 +317,7 @@ def run_mapper(sweep: SweepConfig = DEFAULT_SWEEP) -> dict:
         schedules[name] = out.best.to_dict()
     return {"figure": "mapper", "paper_reference": PAPER_REFERENCE["mapper"],
             "sim_rounds": sweep.sim_rounds, "space": sweep.mapper_space,
+            "pe_budget": mcfg.pe_budget, "chips_list": list(mcfg.chips_list),
             "rows": rows, "pareto": pareto, "best_schedules": schedules}
 
 
@@ -381,7 +477,8 @@ def run_serve(sweep: SweepConfig = DEFAULT_SWEEP) -> dict:
 _RUNNERS: dict[str, Callable[[SweepConfig], dict]] = {
     "tables": run_tables, "fig7_9": run_fig7_9,
     "fig10_12": run_fig10_12, "mesh_scaling": run_mesh_scaling,
-    "mapper": run_mapper, "plan": run_plan, "serve": run_serve,
+    "hierarchy": run_hierarchy, "mapper": run_mapper, "plan": run_plan,
+    "serve": run_serve,
 }
 
 
@@ -422,6 +519,19 @@ def fig7_9_csv_lines(sweep: SweepConfig = DEFAULT_SWEEP) -> list[str]:
 
 def fig10_12_csv_lines(sweep: SweepConfig = DEFAULT_SWEEP) -> list[str]:
     return _fig_section_csv("fig10_12", run_fig10_12(sweep))
+
+
+def _hierarchy_csv(fig: dict) -> list[str]:
+    return [(f"hier_N{r['n']}_p{r['payload_bits']}_c{r['chips']}"
+             f"_{r['package']}_w{r['pkg_width_ratio']},"
+             f"{r.get('elapsed_us', 0.0):.0f},"
+             f"latency_x={r['latency_x']:.3f};energy_x={r['energy_x']:.3f};"
+             f"ina_cycles={r['ina_latency_cycles']}")
+            for r in fig["rows"]]
+
+
+def hierarchy_csv_lines(sweep: SweepConfig = DEFAULT_SWEEP) -> list[str]:
+    return _hierarchy_csv(run_hierarchy(sweep))
 
 
 def _mapper_csv(fig: dict) -> list[str]:
@@ -546,6 +656,8 @@ def run_all(sweep: SweepConfig = DEFAULT_SWEEP,
         for section in ("fig7_9", "fig10_12"):
             if section in sections:
                 csv += _fig_section_csv(section, results[section])
+        if "hierarchy" in sections:
+            csv += _hierarchy_csv(results["hierarchy"])
         if "mapper" in sections:
             csv += _mapper_csv(results["mapper"])
         if "plan" in sections:

@@ -19,12 +19,14 @@ from .schedule import LayerAssignment, NetworkSchedule
 from .search import SearchOutcome, evaluate_mapping, search_network
 from .space import (DATAFLOWS, Mapping, MapperConfig, PAPER_MAPPING,
                     QUICK_MAPPER, SEMANTICS, analytic_latency,
-                    hardware_candidates, layer_candidates)
+                    hardware_candidates, hardware_mapping_fields,
+                    layer_candidates, shard_layer)
 
 __all__ = [
     "Mapping", "MapperConfig", "PAPER_MAPPING", "QUICK_MAPPER",
     "DATAFLOWS", "SEMANTICS",
     "LayerAssignment", "NetworkSchedule",
     "SearchOutcome", "search_network", "evaluate_mapping",
-    "analytic_latency", "hardware_candidates", "layer_candidates",
+    "analytic_latency", "hardware_candidates", "hardware_mapping_fields",
+    "layer_candidates", "shard_layer",
 ]

@@ -19,7 +19,7 @@ from repro.core.noc.collective.schedule import PacketOp, ws_round_program
 from repro.core.noc.traffic import LayerResult, layer_plan
 from repro.core.ops import LayerShape
 
-from .space import Mapping
+from .space import Mapping, shard_layer
 
 
 def mapping_utilization(layer: LayerShape, mapping: Mapping,
@@ -31,10 +31,13 @@ def mapping_utilization(layer: LayerShape, mapping: Mapping,
     0``) and rounds it runs beyond ``F * outputs * passes / (chains * E)``
     are pure ceil waste.  MAC issue time is not simulated (compute overlaps
     the NoC, paper [12]), so this measures how much of the mesh the mapping
-    *can* keep busy, not a cycle-level activity factor.
+    *can* keep busy, not a cycle-level activity factor.  Multi-chip
+    mappings measure their per-chip shard (every chip runs the same
+    placement on its own output rows, so the ratio is chip-invariant).
     """
     m = mapping
     cfg = m.cfg(base_cfg)
+    layer = shard_layer(layer, m.chips)
     plan = layer_plan(layer, cfg, m.e_pes, m.mode, m.q_bits, m.groups)
     provided = plan.rounds * cfg.width * cfg.height * m.e_pes
     live = layer.F * layer.outputs * plan.p * plan.passes
@@ -76,7 +79,7 @@ class NetworkSchedule:
     """Per-layer mappings for a whole network on one hardware point."""
 
     workload: str
-    hardware: tuple[int, int, int]          # (width, height, e_pes)
+    hardware: tuple[int, ...]      # (width, height, e_pes[, chips])
     assignments: tuple[LayerAssignment, ...]
 
     @property
@@ -94,8 +97,9 @@ class NetworkSchedule:
 
     @property
     def num_pes(self) -> int:
-        w, h, e = self.hardware
-        return w * h * e
+        w, h, e = self.hardware[:3]
+        chips = self.hardware[3] if len(self.hardware) > 3 else 1
+        return w * h * e * chips
 
     @property
     def pe_utilization(self) -> float:
@@ -159,6 +163,9 @@ class NetworkSchedule:
             layer = by_name[a.layer]
             m = a.mapping
             cfg = m.cfg(base_cfg)
+            # Multi-chip assignments re-emit one chip's shard program: all
+            # chips run the same rounds, so one lane is the replay unit.
+            layer = shard_layer(layer, m.chips)
             plan = layer_plan(layer, cfg, m.e_pes, m.mode, m.q_bits, m.groups)
             rounds = max(1, min(plan.rounds, window or 1))
             prog = ws_round_program(cfg, m.mode, rounds, g=plan.g, p=plan.p,

@@ -33,7 +33,8 @@ from repro.exec import parallel_map
 
 from .schedule import LayerAssignment, NetworkSchedule
 from .space import (Mapping, MapperConfig, PAPER_MAPPING, analytic_latency,
-                    hardware_candidates, layer_candidates)
+                    hardware_candidates, hardware_mapping_fields,
+                    layer_candidates, shard_layer)
 
 
 @dataclass
@@ -80,10 +81,45 @@ def _eval_key(layer: LayerShape, mapping: Mapping, base_cfg: NocConfig,
             sim_rounds)
 
 
+def _evaluate_multichip(layer: LayerShape, mapping: Mapping,
+                        base_cfg: NocConfig, sim_rounds: int,
+                        package: str) -> LayerResult:
+    """Multi-chip cost: per-chip shard sim + package broadcast surcharge.
+
+    Every chip runs the identical shard concurrently (latency is one
+    chip's; NoC/stream energy multiplies by the chip count), and each
+    weight fill first broadcasts the mesh's fill payload over the package
+    network (:func:`~repro.core.noc.hierarchy.chip_round_cost`, riding the
+    same sim cache).  DESIGN.md S14.
+    """
+    from repro.core.noc.hierarchy import chip_round_cost
+    from repro.core.noc.traffic import layer_plan
+    flat = dataclasses.replace(mapping, chips=1)
+    shard = shard_layer(layer, mapping.chips)
+    r = evaluate_mapping(shard, flat, base_cfg, sim_rounds)
+    cfg = mapping.cfg(base_cfg)
+    plan = layer_plan(shard, cfg, mapping.e_pes, mapping.mode,
+                      mapping.q_bits, mapping.groups)
+    fill_bits = plan.weight_bits_per_router * cfg.width * cfg.height
+    pkg_lat, pkg_en = chip_round_cost(fill_bits, mapping.chips, cfg,
+                                      package=package,
+                                      semantics=mapping.semantics)
+    c = mapping.chips
+    return dataclasses.replace(
+        r, name=layer.name,
+        latency_cycles=r.latency_cycles + pkg_lat * r.fills,
+        noc_energy_pj=r.noc_energy_pj * c + pkg_en * r.fills,
+        stream_energy_pj=r.stream_energy_pj * c)
+
+
 def evaluate_mapping(layer: LayerShape, mapping: Mapping,
                      base_cfg: NocConfig = NocConfig(),
-                     sim_rounds: int = 16) -> LayerResult:
+                     sim_rounds: int = 16,
+                     package: str = "mesh") -> LayerResult:
     """Exact (event-driven, cache-backed) cost of one mapping."""
+    if mapping.chips > 1:
+        return _evaluate_multichip(layer, mapping, base_cfg, sim_rounds,
+                                   package)
     if not SIM_CACHE.enabled or not compiled_enabled():
         return simulate_layer(layer, mapping.mode, mapping.cfg(base_cfg),
                               mapping.e_pes, sim_rounds,
@@ -139,11 +175,11 @@ def _score_hardware(payload) -> tuple[NetworkSchedule, int, int, dict]:
     """
     workload, layers, base_results, hw, mcfg, base_cfg = payload
     memo_before = len(_eval_store())
-    w, h, e = hw
+    w, h, e, chips = hardware_mapping_fields(hw)
     # The hardware's own paper-style mapping is always scored exactly,
     # whatever the analytic ranking says — it anchors the energy-budget
     # pool (and *is* the baseline mapping on the baseline hardware).
-    anchor = Mapping(w, h, e, "ws", "ina", mcfg.q_list[0], None)
+    anchor = Mapping(w, h, e, "ws", "ina", mcfg.q_list[0], None, chips)
     n_cands = n_sim = 0
     assignments = []
     for layer, base_r in zip(layers, base_results):
@@ -155,7 +191,8 @@ def _score_hardware(payload) -> tuple[NetworkSchedule, int, int, dict]:
         if anchor in cands and anchor not in keep:
             keep.append(anchor)
         results = [(m, evaluate_mapping(layer, m, base_cfg,
-                                        mcfg.sim_rounds)) for m in keep]
+                                        mcfg.sim_rounds, mcfg.package))
+                   for m in keep]
         n_sim += len(results)
         m, r = _choose(results, base_r.total_energy_pj)
         assignments.append(
@@ -191,7 +228,8 @@ def search_network(workload: str, layers: Sequence[LayerShape],
     stats = {"candidates": 0, "simulated": 0, "hardware_evaluated": 0}
 
     base_results = [evaluate_mapping(l, baseline_mapping, base_cfg,
-                                     mcfg.sim_rounds) for l in layers]
+                                     mcfg.sim_rounds, mcfg.package)
+                    for l in layers]
     stats["simulated"] += len(base_results)
     baseline = NetworkSchedule(
         workload=workload, hardware=baseline_mapping.hardware,

@@ -46,7 +46,13 @@ SEMANTICS = ("ina", "eject_inject")
 
 @dataclass(frozen=True)
 class Mapping:
-    """One candidate placement of a layer onto the mesh."""
+    """One candidate placement of a layer onto the mesh.
+
+    ``chips`` > 1 replicates the mesh across a package of chips
+    (DESIGN.md S14): output rows shard evenly per chip, weights are
+    broadcast over the package network once per fill, and the per-chip
+    shard runs the unchanged flat simulator.
+    """
 
     width: int = 8
     height: int = 8
@@ -55,6 +61,7 @@ class Mapping:
     semantics: str = "ina"          # "ina" | "eject_inject"
     q_bits: int = DEFAULT_Q_BITS
     groups: Optional[int] = None    # chains per column (None = max feasible)
+    chips: int = 1                  # package replication (1 = flat mesh)
 
     @property
     def mode(self) -> str:
@@ -65,28 +72,35 @@ class Mapping:
 
     @property
     def num_pes(self) -> int:
-        return self.width * self.height * self.e_pes
+        return self.width * self.height * self.e_pes * self.chips
 
     @property
-    def hardware(self) -> tuple[int, int, int]:
-        return (self.width, self.height, self.e_pes)
+    def hardware(self) -> tuple[int, ...]:
+        """(w, h, e) for flat mappings — the pre-hierarchy tuple — and
+        (w, h, e, chips) once a package axis exists."""
+        if self.chips == 1:
+            return (self.width, self.height, self.e_pes)
+        return (self.width, self.height, self.e_pes, self.chips)
 
     @property
     def sort_key(self) -> tuple:
         """Total deterministic order (``groups=None`` sorts first)."""
         return (self.width, self.height, self.e_pes, self.dataflow,
                 self.semantics, self.q_bits,
-                -1 if self.groups is None else self.groups)
+                -1 if self.groups is None else self.groups, self.chips)
 
     def cfg(self, base: NocConfig = NocConfig()) -> NocConfig:
-        """The NocConfig this mapping simulates under (keyed by the cache)."""
+        """The NocConfig one chip of this mapping simulates under."""
         rows = None if self.height == self.width else self.height
         return _mesh_cfg(base, self.width, rows)
 
     def label(self) -> str:
         g = "max" if self.groups is None else str(self.groups)
-        return (f"{self.width}x{self.height}xE{self.e_pes}:{self.dataflow}/"
-                f"{self.semantics}/q{self.q_bits}/g{g}")
+        lab = (f"{self.width}x{self.height}xE{self.e_pes}:{self.dataflow}/"
+               f"{self.semantics}/q{self.q_bits}/g{g}")
+        if self.chips > 1:
+            lab += f"/c{self.chips}"
+        return lab
 
 
 #: Mappings are dict keys in the layer-result memo and members of sort
@@ -108,9 +122,15 @@ PAPER_MAPPING = Mapping()
 
 @dataclass(frozen=True)
 class MapperConfig:
-    """Bounds of the search space (defaults sized to the paper's 64 PEs)."""
+    """Bounds of the search space (defaults sized to the paper's 64 PEs).
 
-    pe_budget: int = 64             # width * height * e_pes ceiling
+    ``pe_budget`` bounds one *chip*; ``chips_list`` adds a package axis on
+    top of it (every listed count pairs with every in-budget chip shape),
+    so multi-chip candidates compare per-chip-fair against the paper's
+    fully-populated single mesh.
+    """
+
+    pe_budget: int = 64             # width * height * e_pes ceiling per chip
     min_pe_fill: float = 0.5        # floor, as a fraction of the budget
     max_aspect: int = 4             # max width/height (and height/width)
     min_dim: int = 2                # smallest mesh side considered
@@ -121,6 +141,8 @@ class MapperConfig:
     group_options: int = 3          # distinct G values tried per (layer, hw)
     prune_keep: int = 6             # survivors simulated per (layer, hw)
     sim_rounds: int = 16            # simulated window length (PR-2 default)
+    chips_list: tuple[int, ...] = (1,)   # package axis (DESIGN.md S14)
+    package: str = "mesh"           # cross-chip fabric ("mesh" | "express")
 
 
 #: CI smoke shape: square + one rectangle, two E points, short windows.
@@ -128,28 +150,40 @@ QUICK_MAPPER = MapperConfig(e_list=(1, 2), min_dim=4, group_options=2,
                             prune_keep=4, sim_rounds=4)
 
 
-def hardware_candidates(mcfg: MapperConfig) -> list[tuple[int, int, int]]:
-    """All (width, height, e_pes) triples inside the budget (deterministic).
+def hardware_candidates(mcfg: MapperConfig) -> list[tuple[int, ...]]:
+    """All hardware points inside the per-chip budget (deterministic).
 
     Dimensions run over powers of two (meshes and Eq. (3) divisions stay
     integral); the budget floor keeps the comparison against the paper's
-    fully-populated mesh fair.
+    fully-populated mesh fair.  Single-chip points stay the historical
+    ``(w, h, e)`` triples; every ``chips_list`` entry > 1 adds
+    ``(w, h, e, chips)`` package points on the same chip shapes.
     """
     dims = []
     d = mcfg.min_dim
     while d * mcfg.min_dim <= mcfg.pe_budget:
         dims.append(d)
         d *= 2
-    out = []
+    out: list[tuple[int, ...]] = []
     lo = mcfg.pe_budget * mcfg.min_pe_fill
     for w in dims:
         for h in dims:
             if max(w, h) > mcfg.max_aspect * min(w, h):
                 continue
             for e in mcfg.e_list:
-                if lo <= w * h * e <= mcfg.pe_budget:
-                    out.append((w, h, e))
+                if not lo <= w * h * e <= mcfg.pe_budget:
+                    continue
+                for chips in sorted(set(mcfg.chips_list)):
+                    out.append((w, h, e) if chips == 1
+                               else (w, h, e, chips))
     return sorted(out)
+
+
+def hardware_mapping_fields(hw: tuple[int, ...]) -> tuple[int, int, int, int]:
+    """(w, h, e, chips) from a 3- or 4-tuple hardware point."""
+    w, h, e = hw[:3]
+    chips = hw[3] if len(hw) > 3 else 1
+    return w, h, e, chips
 
 
 def group_choices(p_req: int, height: int, k: int) -> list[Optional[int]]:
@@ -172,10 +206,10 @@ def group_choices(p_req: int, height: int, k: int) -> list[Optional[int]]:
     return out
 
 
-def layer_candidates(layer: LayerShape, hardware: tuple[int, int, int],
+def layer_candidates(layer: LayerShape, hardware: tuple[int, ...],
                      mcfg: MapperConfig) -> list[Mapping]:
     """Enumerate the per-layer mappings for one hardware point (sorted)."""
-    w, h, e = hardware
+    w, h, e, chips = hardware_mapping_fields(hardware)
     out = []
     for q in mcfg.q_list:
         if "os" in mcfg.dataflows and "ina" in mcfg.semantics:
@@ -184,14 +218,30 @@ def layer_candidates(layer: LayerShape, hardware: tuple[int, int, int],
             # eject/inject routers is not modeled (paper SIV.B compares
             # OS-with-gather only), so OS contributes one candidate per q
             # and none at all when the space excludes capable routers.
-            out.append(Mapping(w, h, e, "os", "ina", q, None))
+            out.append(Mapping(w, h, e, "os", "ina", q, None, chips))
         if "ws" not in mcfg.dataflows:
             continue
         p_req = p_num(layer, q_bits=q)
         for sem in mcfg.semantics:
             for g in group_choices(p_req, h, mcfg.group_options):
-                out.append(Mapping(w, h, e, "ws", sem, q, g))
+                out.append(Mapping(w, h, e, "ws", sem, q, g, chips))
     return sorted(set(out), key=lambda m: m.sort_key)
+
+
+def shard_layer(layer: LayerShape, chips: int) -> LayerShape:
+    """The per-chip slice of a layer under package replication.
+
+    Output rows (M) shard evenly across chips — weights replicate, so the
+    only cross-chip traffic is the per-fill package broadcast the search
+    prices via :func:`~repro.core.noc.hierarchy.chip_round_cost`.  CONV
+    layers shard through their exact im2col GEMM (same MACs, P#, rounds).
+    """
+    if chips <= 1:
+        return layer
+    from repro.core.ops import GemmLayer, im2col
+    g = layer if isinstance(layer, GemmLayer) else im2col(layer)
+    return dataclasses.replace(g, name=f"{g.name}+c{chips}",
+                               M=-(-g.M // chips))
 
 
 def analytic_latency(layer: LayerShape, mapping: Mapping,
@@ -203,9 +253,12 @@ def analytic_latency(layer: LayerShape, mapping: Mapping,
     occupies its ejection port for ``gather_flits`` cycles per round, a
     Fig. 4(a) relay chain adds its eject->add->inject pipeline, and weight
     fills bar execution.  Not exact — contention is what the simulator is
-    for — but monotone enough to rank candidates (DESIGN.md S9).
+    for — but monotone enough to rank candidates (DESIGN.md S9).  Chips > 1
+    rank on their per-chip shard plus a hop-count package-broadcast bound
+    (the exact surcharge is simulated only for pruning survivors).
     """
     cfg = mapping.cfg(base_cfg)
+    layer = shard_layer(layer, mapping.chips)
     plan = layer_plan(layer, cfg, mapping.e_pes, mapping.mode,
                       mapping.q_bits, mapping.groups)
     hop = cfg.router_cycles + cfg.link_cycles
@@ -225,4 +278,11 @@ def analytic_latency(layer: LayerShape, mapping: Mapping,
         # mirroring _os_weight_stream_round in the exact simulator.
         stream += plan.weight_bits / (cfg.flit_bits * cfg.os_weight_reuse
                                       * cfg.os_stream_bw)
-    return fill + depth + plan.rounds * max(per_round, stream)
+    total = fill + depth + plan.rounds * max(per_round, stream)
+    if mapping.chips > 1:
+        # Analytic package surcharge: per fill, the weight payload crosses
+        # the package diameter and serializes onto one root link.
+        pkg_bits = plan.weight_bits_per_router * cfg.width * cfg.height
+        total += plan.fills * ((mapping.chips - 1) * (cfg.router_cycles + 4)
+                               + pkg_bits / cfg.flit_bits)
+    return total

@@ -98,17 +98,41 @@ def collect_psum_sites(cfg: ModelConfig, mesh, shape: ShapeConfig,
 
 
 def resolve_sites(sites: Sequence, objective: str = "latency",
-                  noc_cfg: NocConfig = NocConfig(),
+                  noc_cfg: NocConfig = NocConfig(), *,
+                  chips: int = 1, package: str = "mesh",
                   ) -> tuple[PsumDecision, ...]:
     """Dedup recorded sites and cost each distinct shape exactly once.
 
     Resolution calls the same ``choose_psum_mode`` the planless fallback
     uses (same defaults, same tie-breaks), so a plan-driven run picks
-    bit-identical strategies to today's per-call-site auto path.
+    bit-identical strategies to today's per-call-site auto path.  With
+    ``chips`` > 1 the TP axis spans chips and every site is priced
+    through the hierarchical facade (DESIGN.md S14): intra-chip rows plus
+    a package-level allreduce, same candidate set and tie-breaks.
     """
-    from repro.core.noc.collective.cost import (AUTO_CANDIDATES,
-                                                choose_psum_mode,
-                                                psum_mode_costs)
+    from repro.core.noc.collective.cost import AUTO_CANDIDATES
+    if chips > 1:
+        from repro.core.noc.hierarchy import (choose_hier_psum_mode,
+                                              hier_psum_mode_costs)
+
+        def _costs(p, nbytes):
+            return hier_psum_mode_costs(p, nbytes, noc_cfg, chips=chips,
+                                        package=package)
+
+        def _choose(p, nbytes):
+            return choose_hier_psum_mode(p, nbytes, noc_cfg, chips=chips,
+                                         package=package,
+                                         objective=objective)
+    else:
+        from repro.core.noc.collective.cost import (choose_psum_mode,
+                                                    psum_mode_costs)
+
+        def _costs(p, nbytes):
+            return psum_mode_costs(p, nbytes, noc_cfg)
+
+        def _choose(p, nbytes):
+            return choose_psum_mode(p, nbytes, noc_cfg, objective=objective)
+
     groups: dict[tuple[int, int], dict] = {}
     for s in sites:
         g = groups.setdefault((s.p, s.nbytes), {"count": 0, "ops": set()})
@@ -116,8 +140,8 @@ def resolve_sites(sites: Sequence, objective: str = "latency",
         g["ops"].add(s.op)
     out = []
     for (p, nbytes), g in sorted(groups.items()):
-        costs = psum_mode_costs(p, nbytes, noc_cfg)
-        mode = choose_psum_mode(p, nbytes, noc_cfg, objective=objective)
+        costs = _costs(p, nbytes)
+        mode = _choose(p, nbytes)
         out.append(PsumDecision(
             p=p, nbytes=nbytes, mode=mode,
             ops=tuple(sorted(g["ops"])), count=g["count"],
@@ -188,6 +212,8 @@ def build_plan(cfg: ModelConfig, mesh_shape, phase: str, *,
                shape: Optional[ShapeConfig] = None,
                noc_cfg: NocConfig = NocConfig(),
                jobs: int = 1,
+               chips: int = 1,
+               package: str = "mesh",
                pctx=None) -> ExecutionPlan:
     """One planning pass -> a frozen, serializable :class:`ExecutionPlan`.
 
@@ -196,7 +222,9 @@ def build_plan(cfg: ModelConfig, mesh_shape, phase: str, *,
     and the batch width for decode (a decode GEMM runs one token per
     sequence).  ``gemm_search=False`` skips the mapper verdicts (tile and
     psum planning keep working) for callers that only consume the runtime
-    half.
+    half.  ``chips`` > 1 prices every psum site on a mesh-of-meshes
+    (``package`` selects the cross-chip fabric, DESIGN.md S14) and stamps
+    the chip topology into the plan identity.
     """
     shape = phase_shape(phase, shape)
     mesh = normalize_mesh(mesh_shape)
@@ -205,7 +233,8 @@ def build_plan(cfg: ModelConfig, mesh_shape, phase: str, *,
     dtype = str(cfg.dtype)
 
     sites = collect_psum_sites(cfg, trace_mesh(mesh_shape), shape, pctx=pctx)
-    psum = resolve_sites(sites, objective=objective, noc_cfg=noc_cfg)
+    psum = resolve_sites(sites, objective=objective, noc_cfg=noc_cfg,
+                         chips=chips, package=package)
     if gemm_search:
         gemms, hardware = gemm_verdicts(cfg, tokens, mapper_space, jobs=jobs)
     else:
@@ -217,4 +246,5 @@ def build_plan(cfg: ModelConfig, mesh_shape, phase: str, *,
         schema=plan_schema_hash(), objective=objective,
         psum=psum, gemms=gemms, tiles=tiles,
         mapper_hardware=hardware, mapper_space=mapper_space, tokens=tokens,
-        noc=repr(noc_cfg), config=config_digest(cfg))
+        noc=repr(noc_cfg), config=config_digest(cfg),
+        chips=chips, package=package)

@@ -78,10 +78,18 @@ def config_digest(cfg) -> str:
 
 
 def plan_key(model: str, mesh: tuple[tuple[str, int], ...], phase: str,
-             dtype: str) -> str:
-    """Filesystem-safe identity of one plan's inputs (the store filename)."""
+             dtype: str, chips: int = 1, package: str = "mesh") -> str:
+    """Filesystem-safe identity of one plan's inputs (the store filename).
+
+    Multi-chip plans get a ``__cN[e]`` suffix (``e`` = express package) so
+    they store alongside — never shadow — the single-chip plan for the
+    same (model, mesh, phase, dtype) cell; 1-chip keys are unchanged from
+    pre-hierarchy stores.
+    """
     mesh_s = "x".join(f"{a}{s}" for a, s in mesh)
     raw = f"{model}__{mesh_s}__{phase}__{dtype}"
+    if chips > 1:
+        raw += f"__c{chips}" + ("e" if package == "express" else "")
     return "".join(c if c.isalnum() or c in "._-" else "-" for c in raw)
 
 
@@ -166,6 +174,11 @@ class ExecutionPlan:
     tokens: int = 256                      # GEMM M tile the verdicts/tiles use
     noc: str = ""                          # repr(NocConfig) decisions cost under
     config: str = ""                       # config_digest(cfg) traced from
+    #: Chip topology the psum decisions were costed on (DESIGN.md S14):
+    #: ``chips`` > 1 means every TP axis is split across that many chips
+    #: and the decisions price intra-chip + package levels.
+    chips: int = 1
+    package: str = "mesh"                  # package variant ("mesh"|"express")
 
     # ------------------------------------------------------------------ #
     # Consumer lookups (the hot path: O(1) dict probes, indexes built once)
@@ -191,7 +204,8 @@ class ExecutionPlan:
     @property
     def key(self) -> str:
         """Filesystem-safe identity of this plan's inputs (store filename)."""
-        return plan_key(self.model, self.mesh, self.phase, self.dtype)
+        return plan_key(self.model, self.mesh, self.phase, self.dtype,
+                        self.chips, self.package)
 
     @property
     def site_count(self) -> int:
@@ -248,7 +262,8 @@ class ExecutionPlan:
             mapper_hardware=tuple(d["mapper_hardware"])
             if d.get("mapper_hardware") else None,
             mapper_space=d["mapper_space"], tokens=d["tokens"],
-            noc=d.get("noc", ""), config=d.get("config", ""))
+            noc=d.get("noc", ""), config=d.get("config", ""),
+            chips=d.get("chips", 1), package=d.get("package", "mesh"))
 
     @classmethod
     def from_json(cls, text: str) -> "ExecutionPlan":

@@ -182,6 +182,15 @@ class PlanStore:
             req = build_kwargs.get(key)
             if req is not None and req != have:
                 return False
+        # Chip topology is part of the plan key for chips > 1, but a
+        # pre-hierarchy store could hold a 1-chip plan under the bare key
+        # a multi-chip request would (wrongly) also resolve to if the key
+        # scheme regressed — check content as well as filename.
+        if plan.chips != build_kwargs.get("chips", 1):
+            return False
+        if plan.chips > 1 and \
+                plan.package != build_kwargs.get("package", "mesh"):
+            return False
         noc = repr(build_kwargs.get("noc_cfg") or NocConfig())
         return plan.noc == noc
 
@@ -193,7 +202,8 @@ class PlanStore:
         counts as cold and is rebuilt in place."""
         from .builder import build_plan, normalize_mesh
         key = plan_key(cfg.name, normalize_mesh(mesh_shape), phase,
-                       str(cfg.dtype))
+                       str(cfg.dtype), build_kwargs.get("chips", 1),
+                       build_kwargs.get("package", "mesh"))
         plan = self.load(key)
         if plan is not None and self._compatible(plan, cfg, build_kwargs):
             return plan, False

@@ -68,6 +68,13 @@ def build_parser() -> argparse.ArgumentParser:
                     help="per-instance mesh DxM for the phase plans")
     ap.add_argument("--semantics", default="ina", choices=SEMANTICS,
                     help="collective semantics priced by the cost model")
+    ap.add_argument("--chips", type=int, default=1,
+                    help="chips per replica; with --search-fleet every "
+                         "power of two up to this joins the trade-off "
+                         "(replica count vs chips each, DESIGN.md S14)")
+    ap.add_argument("--package", default="mesh",
+                    choices=("mesh", "express"),
+                    help="cross-chip package fabric for --chips > 1")
     ap.add_argument("--clock-ghz", type=float, default=1.0)
     ap.add_argument("--calibration", type=float, default=1.0,
                     help="measured-seconds-per-modeled-second scale")
@@ -123,23 +130,38 @@ def main(argv=None) -> int:
     mesh_shape = parse_mesh(args.mesh)
 
     # -- per-phase plans + cost model ---------------------------------- #
+    # chip options: powers of two up to --chips (1 always included); the
+    # single-run path prices exactly --chips, --search-fleet trades them.
+    chip_options = [1]
+    while chip_options[-1] * 2 <= max(1, args.chips):
+        chip_options.append(chip_options[-1] * 2)
+    if args.chips not in chip_options:
+        chip_options.append(args.chips)
     doc_plan = None
+    cost_by_chips = None
     if args.no_plan:
         from repro.serve.costs import SyntheticCostModel
         cost = SyntheticCostModel()
         print("[serve] --no-plan: synthetic cost model")
     else:
         from repro.serve.costs import PlanCostModel, serve_plans
-        plans = serve_plans(cfg, mesh_shape, plan_dir=args.plan_dir)
-        cost = PlanCostModel.from_plans(
-            cfg, plans["prefill"][0], plans["decode"][0],
-            prefill_chunk=args.prefill_chunk, semantics=args.semantics,
-            clock_ghz=args.clock_ghz, calibration=args.calibration)
-        doc_plan = {
-            phase: {"key": info["key"], "from_store": info["from_store"],
+        doc_plan = {}
+        cost_by_chips = {}
+        want = chip_options if args.search_fleet else [args.chips]
+        for chips in want:
+            plans = serve_plans(cfg, mesh_shape, plan_dir=args.plan_dir,
+                                chips=chips, package=args.package)
+            cost_by_chips[chips] = PlanCostModel.from_plans(
+                cfg, plans["prefill"][0], plans["decode"][0],
+                prefill_chunk=args.prefill_chunk, semantics=args.semantics,
+                clock_ghz=args.clock_ghz, calibration=args.calibration)
+            for phase, (_, info) in plans.items():
+                doc_plan[f"{phase}__c{chips}" if chips > 1 else phase] = {
+                    "key": info["key"], "from_store": info["from_store"],
                     "collective_sims": info["collective_sims"],
                     "modes": info["psum"]["modes"]}
-            for phase, (_, info) in plans.items()}
+        cost = cost_by_chips[args.chips if not args.search_fleet
+                             else chip_options[0]]
         total_sims = sum(p["collective_sims"] for p in doc_plan.values())
         print(f"[serve] per-phase plans ready "
               f"(collective sims this launch: {total_sims})")
@@ -175,12 +197,21 @@ def main(argv=None) -> int:
     watch = Stopwatch()
     if args.search_fleet:
         from repro.serve.cluster import search_fleet
+        multi = cost_by_chips if cost_by_chips and len(cost_by_chips) > 1 \
+            else None
+        if multi is not None:
+            sim_kwargs.pop("cost")
         answer = search_fleet(requests, slo_s, metric=args.slo_metric,
-                              max_fleet=args.max_fleet, **sim_kwargs)
+                              max_fleet=args.max_fleet,
+                              cost_by_chips=multi, **sim_kwargs)
         metrics = answer["metrics"] or {}
         doc_fleet = answer
         fleet_str = answer["fleet"] if answer["fleet"] is not None \
             else f">{args.max_fleet}"
+        if multi is not None and answer["fleet"] is not None:
+            fleet_str = (f"{answer['fleet']} x "
+                         f"{answer['chips_per_replica']}-chip "
+                         f"({answer['total_chips']} chips total)")
         print(f"[serve] fleet answer: {fleet_str} instance(s) for p99 "
               f"{args.slo_metric} <= {args.slo_p99_ms} ms "
               f"({len(answer['searched'])} sizes simulated, "
@@ -208,6 +239,7 @@ def main(argv=None) -> int:
         "requests": len(requests), "mesh": [list(p) for p in mesh_shape],
         "semantics": args.semantics, "clock_ghz": args.clock_ghz,
         "calibration": args.calibration,
+        "chips": args.chips, "package": args.package,
         "instance": {"slots": args.slots, "max_seq": args.max_seq,
                      "block_size": args.block_size,
                      "num_blocks": args.num_blocks,

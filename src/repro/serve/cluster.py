@@ -182,6 +182,7 @@ class ClusterSimulator:
 
 def search_fleet(requests: list[Request], slo_s: float,
                  metric: str = "e2e_s", max_fleet: int = 16,
+                 cost_by_chips: "dict[int, object] | None" = None,
                  **sim_kwargs) -> dict:
     """Smallest fleet whose p99 ``metric`` meets ``slo_s``.
 
@@ -189,7 +190,41 @@ def search_fleet(requests: list[Request], slo_s: float,
     where ``searched`` records every fleet size tried with its p99 —
     capacity is monotone in fleet size for this workload model, so the
     first size that meets the SLO is the answer.
+
+    ``cost_by_chips`` (DESIGN.md S14) maps chips-per-replica to a cost
+    model (e.g. multi-chip :class:`~repro.serve.costs.PlanCostModel`s) and
+    turns the search two-dimensional: every chip option runs its own fleet
+    sweep, ``searched`` rows gain ``chips_per_replica``/``total_chips``,
+    and the answer minimizes **total chips** (replicas x chips each; fewer
+    chips per replica breaks ties — bigger replicas must earn their
+    silicon).  The flat call (``cost_by_chips=None``) is byte-identical to
+    the pre-hierarchy behaviour.
     """
+    if cost_by_chips is not None:
+        searched: list[dict] = []
+        best = None                       # (total_chips, chips, answer)
+        for chips in sorted(cost_by_chips):
+            kwargs = dict(sim_kwargs, cost=cost_by_chips[chips])
+            ans = search_fleet(requests, slo_s, metric=metric,
+                               max_fleet=max_fleet, **kwargs)
+            for row in ans["searched"]:
+                row["chips_per_replica"] = chips
+                row["total_chips"] = chips * row["fleet"]
+            searched.extend(ans["searched"])
+            if ans["fleet"] is not None:
+                key = (chips * ans["fleet"], chips)
+                if best is None or key < best[0]:
+                    best = (key, chips, ans)
+        if best is None:
+            return {"fleet": None, "chips_per_replica": None,
+                    "total_chips": None, "slo_s": slo_s, "metric": metric,
+                    "searched": searched, "metrics": None}
+        _, chips, ans = best
+        return {"fleet": ans["fleet"], "chips_per_replica": chips,
+                "total_chips": chips * ans["fleet"], "slo_s": slo_s,
+                "metric": metric, "searched": searched,
+                "metrics": ans["metrics"]}
+
     searched = []
     chosen = None
     chosen_metrics = None

@@ -47,7 +47,13 @@ def _psum_cycles(plan, semantics: str) -> float:
 
 @dataclasses.dataclass(frozen=True)
 class PlanCostModel:
-    """Step latencies derived from (prefill plan, decode plan)."""
+    """Step latencies derived from (prefill plan, decode plan).
+
+    ``chips`` is read off the plans (DESIGN.md S14): a ``chips``-chip
+    replica shards the token tile across its chips (the mapper's output-row
+    split), so one pass covers ``tokens * chips`` tokens — the psum cycles
+    already carry the plans' hierarchical collective pricing.
+    """
 
     arch: str
     semantics: str
@@ -61,6 +67,7 @@ class PlanCostModel:
     dec_gemm_cycles: float
     dec_tokens: int
     dec_psum_cycles: float
+    chips: int = 1                 # chips per replica (from the plans)
 
     @classmethod
     def from_plans(cls, cfg: ModelConfig, prefill_plan, decode_plan,
@@ -71,6 +78,10 @@ class PlanCostModel:
             raise ValueError(f"semantics {semantics!r} not in {SEMANTICS}")
         if not prefill_plan.gemms or not decode_plan.gemms:
             raise ValueError("cost model needs plans built with gemm_search")
+        if prefill_plan.chips != decode_plan.chips:
+            raise ValueError(
+                f"phase plans disagree on chip count "
+                f"({prefill_plan.chips} vs {decode_plan.chips})")
         return cls(
             arch=cfg.name, semantics=semantics, clock_ghz=clock_ghz,
             calibration=calibration, depth=depth_units(cfg),
@@ -80,20 +91,23 @@ class PlanCostModel:
             pf_psum_cycles=_psum_cycles(prefill_plan, semantics),
             dec_gemm_cycles=_gemm_cycles(decode_plan, semantics),
             dec_tokens=decode_plan.tokens,
-            dec_psum_cycles=_psum_cycles(decode_plan, semantics))
+            dec_psum_cycles=_psum_cycles(decode_plan, semantics),
+            chips=prefill_plan.chips)
 
     def _seconds(self, cycles: float) -> float:
         return cycles / (self.clock_ghz * 1e9) * self.calibration
 
     def prefill_chunk_seconds(self) -> float:
         """One B=1 chunk of chunked prefill."""
-        tiles = max(1, math.ceil(self.prefill_chunk / self.pf_tokens))
+        tiles = max(1, math.ceil(self.prefill_chunk
+                                 / (self.pf_tokens * self.chips)))
         return self._seconds(
             self.depth * self.pf_gemm_cycles * tiles + self.pf_psum_cycles)
 
     def decode_iter_seconds(self, n_active: int) -> float:
         """One continuous-batching decode step over ``n_active`` slots."""
-        tiles = max(1, math.ceil(max(1, n_active) / self.dec_tokens))
+        tiles = max(1, math.ceil(max(1, n_active)
+                                 / (self.dec_tokens * self.chips)))
         return self._seconds(
             self.depth * self.dec_gemm_cycles * tiles + self.dec_psum_cycles)
 
@@ -114,12 +128,15 @@ class SyntheticCostModel:
 
 
 def serve_plans(cfg: ModelConfig, mesh_shape, plan_dir=None,
-                verbose: bool = True) -> dict:
+                verbose: bool = True, chips: int = 1,
+                package: str = "mesh") -> dict:
     """Per-phase plans for serving: ``{"prefill": (plan, info), "decode":
     (plan, info)}`` through :func:`~repro.plan.plan_for_launch` on the
     canonical phase shapes — a store warmed by ``experiments --section
     plan`` (or a previous serve run) answers with **zero collective
-    simulations**, the acceptance evidence ``repro.serve`` reports."""
+    simulations**, the acceptance evidence ``repro.serve`` reports.
+    ``chips`` > 1 plans a multi-chip replica (hierarchical psum pricing,
+    stored under the plan's ``__cN`` key)."""
     from repro.configs.base import SHAPES
     from repro.plan import plan_for_launch
 
@@ -128,6 +145,7 @@ def serve_plans(cfg: ModelConfig, mesh_shape, plan_dir=None,
                               ("decode", "decode_32k")):
         plan, info = plan_for_launch(cfg, mesh_shape, SHAPES[shape_name],
                                      "auto", plan_dir=plan_dir,
-                                     verbose=verbose)
+                                     verbose=verbose, chips=chips,
+                                     package=package)
         out[phase] = (plan, info)
     return out

@@ -1,0 +1,391 @@
+"""Multi-chip hierarchy (DESIGN.md S14): mesh-of-meshes topology,
+hierarchical collectives, and the layers threaded on top.
+
+Coverage map (ISSUE 8):
+
+* degenerate equivalence — a 1-chip hierarchy replays every collective
+  corpus case and every quick fig7-12 WS plan shape bit-identically to
+  the flat engines (latency + the full energy ledger, both engines), and
+  the 1-chip lowering *is* the flat ``plan_collective`` program;
+* hierarchy verifier — the whole mesh-of-meshes corpus verifies clean,
+  and one seeded mutation per finding class is flagged: chip-boundary
+  escape / bad express channel -> ``hier-route``, dropped chip lane /
+  dropped contribution -> ``hier-fold``, cyclic path-override ring in
+  one lane -> ``cdg-deadlock`` (the same ring split across two chips is
+  clean: channels are namespaced per chip);
+* route-cache regression — a hierarchical sweep after a warm flat run
+  derives no new flat-mesh routes, and replanning derives nothing at all;
+* mapper package axis — ``chips_list`` adds deterministic ``(w, h, e,
+  chips)`` points without disturbing the historical triples, and a
+  2-chip evaluation is reproducible and dearer than its 1-chip shard;
+* plan store — a multi-chip plan keys under ``__cN``, re-plans warm with
+  0 collective engine runs, and never answers a flat request.
+"""
+import dataclasses
+
+from repro.analysis.corpus import (collective_programs, hier_schedules,
+                                   ws_programs)
+from repro.analysis.verify import verify_hier_schedule
+from repro.configs import ARCHS
+from repro.configs.base import SHAPES
+from repro.core.noc.collective.engine import run_program
+from repro.core.noc.collective.schedule import PacketOp, plan_collective
+from repro.core.noc.hierarchy import (HierLane, HierLevel,
+                                      HierarchicalMesh,
+                                      HierarchicalSchedule,
+                                      flat_hier_schedule,
+                                      plan_hier_collective,
+                                      run_hier_schedule)
+from repro.core.noc.router import NocConfig
+from repro.core.noc.simcache import SIM_CACHE
+from repro.core.noc.topology import ROUTE_STATS, clear_route_caches
+
+CFG4 = NocConfig(n=4)
+MESH = (("data", 16), ("model", 16))
+
+
+def _checks(findings):
+    return {f.check for f in findings}
+
+
+# --------------------------------------------------------------------------- #
+# 1. Degenerate equivalence: 1 chip == flat mesh, bit for bit
+# --------------------------------------------------------------------------- #
+def test_flat_wrapper_bit_identical_collective_corpus():
+    for case, cfg, prog in collective_programs():
+        hmesh = HierarchicalMesh(chip_w=cfg.width, chip_h=cfg.height)
+        sched = flat_hier_schedule(hmesh, prog, cfg)
+        for engine in ("auto", "heap"):
+            res = run_hier_schedule(sched, engine=engine)
+            ref = run_program(list(prog), cfg, engine=engine)
+            label = (case["op"], case["semantics"], case["label"], engine)
+            assert res.latency_cycles == ref.latency_cycles, label
+            assert res.ledger == ref.ledger, label
+            assert res.energy_pj == ref.network_energy_pj(cfg), label
+
+
+def test_flat_wrapper_bit_identical_ws_shapes():
+    for shape, cfg, prog in ws_programs(quick=True, window=2):
+        hmesh = HierarchicalMesh(chip_w=cfg.width, chip_h=cfg.height)
+        sched = flat_hier_schedule(hmesh, prog, cfg)
+        for engine in ("auto", "heap"):
+            res = run_hier_schedule(sched, engine=engine)
+            ref = run_program(list(prog), cfg, engine=engine)
+            label = (shape["layer"], shape["mode"], shape["e_pes"], engine)
+            assert res.latency_cycles == ref.latency_cycles, label
+            assert res.ledger == ref.ledger, label
+
+
+def test_one_chip_lowering_is_the_flat_program():
+    parts = [(x, y) for x in range(4) for y in range(4)]
+    for op in ("reduce", "broadcast", "allreduce"):
+        hmesh = HierarchicalMesh(chip_w=4, chip_h=4)
+        sched = plan_hier_collective(op, hmesh, 2048.0, CFG4)
+        assert [lvl.name for lvl in sched.levels] == ["flat"]
+        (lane,) = sched.levels[0].lanes
+        assert lane.cfg is CFG4          # same object: same cache keys
+        flat = plan_collective(op, parts, 2048.0, CFG4, root=(0, 0))
+        assert list(lane.prog) == flat
+
+
+# --------------------------------------------------------------------------- #
+# 2. Hierarchy verifier: corpus clean + one mutation per finding class
+# --------------------------------------------------------------------------- #
+def test_hier_corpus_verifies_clean():
+    n = 0
+    for case, sched in hier_schedules():
+        n += 1
+        assert not verify_hier_schedule(sched), case
+    assert n == 32                       # 2 grids x 2 variants x op space
+
+
+def _mutate_lane(sched, level_name, fn, lane_idx=0):
+    levels = []
+    for level in sched.levels:
+        lanes = list(level.lanes)
+        if level.name == level_name:
+            lanes[lane_idx] = fn(lanes[lane_idx])
+        levels.append(dataclasses.replace(level, lanes=tuple(lanes)))
+    return dataclasses.replace(sched, levels=tuple(levels))
+
+
+def _mutate_op(lane, idx, **changes):
+    prog = list(lane.prog)
+    prog[idx] = dataclasses.replace(prog[idx], **changes)
+    return dataclasses.replace(lane, prog=tuple(prog))
+
+
+def _first_routed(lane):
+    for i, op in enumerate(lane.prog):
+        if op.flits:
+            return i
+    raise AssertionError("lane has no routed op")
+
+
+def _hier(op="reduce", package="mesh", chips_x=2, chips_y=1, **kw):
+    hmesh = HierarchicalMesh(chip_w=4, chip_h=4, chips_x=chips_x,
+                             chips_y=chips_y, package=package)
+    return plan_hier_collective(op, hmesh, 2048.0, CFG4, **kw)
+
+
+def test_mutation_chip_boundary_escape_is_hier_route():
+    sched = _hier("reduce")
+    lane = sched.levels[0].lanes[0]
+    i = _first_routed(lane)
+    bad = _mutate_lane(sched, "intra-reduce",
+                       lambda ln: _mutate_op(ln, i, dst=(4, 0), path=None))
+    assert "hier-route" in _checks(verify_hier_schedule(bad))
+
+
+def test_mutation_express_channel_shape_is_hier_route():
+    sched = _hier("reduce", package="express", chips_x=2, chips_y=2)
+    pkg = next(lvl for lvl in sched.levels if lvl.name == "package")
+    lane = pkg.lanes[0]
+    i = _first_routed(lane)
+    # a 3-hop path is not a dedicated chip-root channel
+    op = lane.prog[i]
+    detour = [tuple(op.src), (op.src[0], 1 - op.src[1]), tuple(op.dst)]
+    bad = _mutate_lane(sched, "package",
+                       lambda ln: _mutate_op(ln, i, path=detour))
+    assert "hier-route" in _checks(verify_hier_schedule(bad))
+    # ...and a non-chip coordinate is flagged even on a 2-node channel
+    bad = _mutate_lane(sched, "package",
+                       lambda ln: _mutate_op(ln, i, src=(5, 5),
+                                             path=[(5, 5), tuple(op.dst)]))
+    assert "hier-route" in _checks(verify_hier_schedule(bad))
+
+
+def test_mutation_dropped_chip_lane_is_hier_fold():
+    sched = _hier("reduce", chips_x=2, chips_y=2)
+    intra = next(lvl for lvl in sched.levels if lvl.name == "intra-reduce")
+    levels = tuple(dataclasses.replace(lvl, lanes=lvl.lanes[1:])
+                   if lvl.name == "intra-reduce" else lvl
+                   for lvl in sched.levels)
+    bad = dataclasses.replace(sched, levels=levels)
+    assert len(intra.lanes) == 4
+    assert "hier-fold" in _checks(verify_hier_schedule(bad))
+
+
+def test_mutation_dropped_contribution_is_hier_fold():
+    sched = _hier("reduce")
+    lane = sched.levels[0].lanes[0]
+    # strip a leaf participant from the final op's accumulated contribs:
+    # its operand arrives via the dep packets, so the merge now drops it
+    last = len(lane.prog) - 1
+    acc = sorted(lane.prog[last].contribs)
+    bad = _mutate_lane(
+        sched, "intra-reduce",
+        lambda ln: _mutate_op(ln, last, contribs=frozenset(acc[:-1])))
+    assert "hier-fold" in _checks(verify_hier_schedule(bad))
+
+
+_RING = [
+    [(0, 0), (1, 0), (1, 1)],            # ring links R1 -> R2
+    [(1, 0), (1, 1), (0, 1)],            # R2 -> R3
+    [(1, 1), (0, 1), (0, 0)],            # R3 -> R4
+    [(0, 1), (0, 0), (1, 0)],            # R4 -> R1: closes the cycle
+]
+
+
+def _ring_ops(paths):
+    return tuple(PacketOp(p[0], p[-1], 4, path=list(p), tag="ring")
+                 for p in paths)
+
+
+def test_mutation_turning_ring_is_cdg_deadlock():
+    hmesh = HierarchicalMesh(chip_w=4, chip_h=4)
+    sched = flat_hier_schedule(hmesh, _ring_ops(_RING), CFG4)
+    assert "cdg-deadlock" in _checks(verify_hier_schedule(sched))
+
+
+def test_cdg_channels_are_namespaced_per_chip():
+    # The same four turning ops split across two chips share no physical
+    # link, so the two-level CDG must NOT see a cycle.
+    hmesh = HierarchicalMesh(chip_w=4, chip_h=4, chips_x=2)
+    chip_cfg = hmesh.chip_cfg(CFG4)
+    lanes = tuple(
+        HierLane(label=f"chip{c}", scope="chip", cfg=chip_cfg,
+                 prog=_ring_ops(_RING[c::2]), chip=c)
+        for c in (0, 1))
+    sched = HierarchicalSchedule(
+        hmesh=hmesh, op="flat", semantics="ina", algorithm="reduce_bcast",
+        payload_bits=0.0, levels=(HierLevel("flat", lanes),))
+    assert "cdg-deadlock" not in _checks(verify_hier_schedule(sched))
+
+
+# --------------------------------------------------------------------------- #
+# 3. Route caches: hierarchical sweeps re-derive no flat-mesh routes
+# --------------------------------------------------------------------------- #
+def test_hier_sweep_reuses_warm_flat_routes():
+    cfg = NocConfig()                    # the 8x8 flat mesh
+    clear_route_caches()
+    parts = [(x, y) for x in range(8) for y in range(8)]
+    run_program(plan_collective("allreduce", parts, 4096.0, cfg,
+                                root=(0, 0)), cfg)
+    warm = ROUTE_STATS["derived"]
+    assert warm > 0
+    for package in ("mesh", "express"):
+        hmesh = HierarchicalMesh(chip_w=8, chip_h=8, chips_x=2,
+                                 package=package)
+        run_hier_schedule(plan_hier_collective("allreduce", hmesh,
+                                               4096.0, cfg))
+    # chip lanes ride the warm flat routes; the 2x1 package grid's
+    # root-to-root hops are coordinate pairs the 8x8 warm-up already
+    # derived (xy_route is shape-independent) — nothing new.
+    assert ROUTE_STATS["derived"] == warm
+    run_hier_schedule(plan_hier_collective(
+        "allreduce", HierarchicalMesh(chip_w=8, chip_h=8, chips_x=2),
+        4096.0, cfg))
+    assert ROUTE_STATS["derived"] == warm
+
+
+# --------------------------------------------------------------------------- #
+# 4. Mapper package axis
+# --------------------------------------------------------------------------- #
+def test_chips_axis_extends_hardware_space_deterministically():
+    from repro.mapper import hardware_candidates
+    from repro.mapper.space import QUICK_MAPPER
+    mcfg = dataclasses.replace(QUICK_MAPPER, chips_list=(1, 2))
+    flat = hardware_candidates(QUICK_MAPPER)
+    multi = hardware_candidates(mcfg)
+    assert set(flat) < set(multi)                    # strict superset
+    added = sorted(set(multi) - set(flat))
+    assert added and all(len(hw) == 4 and hw[3] == 2 for hw in added)
+    assert {hw[:3] for hw in added} == set(flat)     # same chip shapes
+    assert multi == hardware_candidates(mcfg)        # stable order
+
+
+def test_multichip_evaluation_deterministic_and_dearer():
+    from repro.core.workloads import WORKLOADS
+    from repro.mapper import Mapping, evaluate_mapping
+    layer = WORKLOADS["alexnet"][1]
+    one = Mapping(4, 4, 1)
+    two = dataclasses.replace(one, chips=2)
+    a = evaluate_mapping(layer, two, CFG4, sim_rounds=4)
+    b = evaluate_mapping(layer, two, CFG4, sim_rounds=4)
+    assert a == b
+    flat = evaluate_mapping(layer, one, CFG4, sim_rounds=4)
+    # the package broadcast surcharge is real latency; replicated meshes
+    # burn replicated NoC energy
+    assert a.latency_cycles > 0 and a.noc_energy_pj > flat.noc_energy_pj
+
+
+def test_search_with_chips_axis_is_reproducible():
+    from repro.core.workloads import WORKLOADS
+    from repro.mapper import search_network
+    from repro.mapper.space import QUICK_MAPPER
+    mcfg = dataclasses.replace(QUICK_MAPPER, e_list=(1,), min_dim=4,
+                               group_options=1, prune_keep=2, sim_rounds=4,
+                               chips_list=(1, 2))
+    layers = list(WORKLOADS["alexnet"][:2])
+    a = search_network("alexnet", layers, mcfg)
+    b = search_network("alexnet", layers, mcfg)
+    assert a.best.hardware == b.best.hardware
+    assert [x.mapping for x in a.best.assignments] \
+        == [x.mapping for x in b.best.assignments]
+    assert a.best.latency_cycles == b.best.latency_cycles
+    # the package axis was actually searched: every chip shape twice
+    from repro.mapper import hardware_candidates
+    hws = hardware_candidates(mcfg)
+    assert a.stats["hardware_evaluated"] == len(hws)
+    assert len(hws) == 2 * len(hardware_candidates(
+        dataclasses.replace(mcfg, chips_list=(1,))))
+
+
+# --------------------------------------------------------------------------- #
+# 5. Plan store: __cN keys, warm multi-chip re-plan, no cross-answers
+# --------------------------------------------------------------------------- #
+def test_multichip_plan_store_warm_roundtrip(tmp_path, monkeypatch):
+    from repro.plan import plan_for_launch
+    monkeypatch.setattr(SIM_CACHE, "_persist_dir", tmp_path)
+    cfg = ARCHS["qwen2-1.5b"]
+    shape = SHAPES["decode_32k"]
+    plan, info = plan_for_launch(cfg, MESH, shape, "auto",
+                                 plan_dir=tmp_path, verbose=False,
+                                 gemm_search=False, chips=2)
+    assert plan.chips == 2 and plan.key.endswith("__c2")
+    assert not info["from_store"]
+    plan2, info2 = plan_for_launch(cfg, MESH, shape, "auto",
+                                   plan_dir=tmp_path, verbose=False,
+                                   gemm_search=False, chips=2)
+    assert plan2 == plan
+    assert info2["from_store"] and info2["collective_sims"] == 0
+    # a flat request keys differently and never reads the __c2 plan
+    flat, finfo = plan_for_launch(cfg, MESH, shape, "auto",
+                                  plan_dir=tmp_path, verbose=False,
+                                  gemm_search=False)
+    assert flat.chips == 1 and flat.key != plan.key
+    assert not finfo["from_store"]
+    # express keys distinctly from mesh at the same chip count
+    exp, _ = plan_for_launch(cfg, MESH, shape, "auto", plan_dir=tmp_path,
+                             verbose=False, gemm_search=False, chips=2,
+                             package="express")
+    assert exp.key.endswith("__c2e") and exp.key != plan.key
+
+
+# --------------------------------------------------------------------------- #
+# 6. Experiments CLI: --section hierarchy + mapper --pe-budget/--chips
+# --------------------------------------------------------------------------- #
+def _cli(tmp_path, out, *extra):
+    from repro.experiments.__main__ import main
+    argv = ["--quick", "--no-persist", "--out", str(tmp_path / out),
+            *extra]
+    assert main(argv) == 0
+    import json
+    section = extra[extra.index("--sections") + 1]
+    return json.loads((tmp_path / out / f"{section}.json").read_text())
+
+
+def _no_elapsed(rows):
+    """Rows minus wall-clock and cache-occupancy fields (sim_hits/misses
+    describe what the process-wide SIM_CACHE already held, not results)."""
+    out = []
+    for r in rows:
+        r = {k: v for k, v in r.items() if k != "elapsed_us"}
+        if isinstance(r.get("search"), dict):
+            r["search"] = {k: v for k, v in r["search"].items()
+                           if k not in ("sim_hits", "sim_misses")}
+        out.append(r)
+    return out
+
+
+def test_cli_hierarchy_section_deterministic(tmp_path):
+    a = _cli(tmp_path, "a", "--sections", "hierarchy")
+    b = _cli(tmp_path, "b", "--sections", "hierarchy")
+    assert len(a["rows"]) == 3          # quick: (1 flat + 2x1 both fabrics)
+    assert _no_elapsed(a["rows"]) == _no_elapsed(b["rows"])
+    # the flat row is the paper mesh; multi-chip keeps an advantage > 1
+    by_pkg = {r["package"]: r for r in a["rows"]}
+    assert by_pkg["flat"]["chips"] == 1
+    assert all(r["latency_x"] > 1.0 for r in a["rows"])
+    # adding a package level cannot make the collective faster
+    assert all(r["ina_latency_cycles"] >=
+               by_pkg["flat"]["ina_latency_cycles"]
+               for r in a["rows"] if r["chips"] > 1)
+
+
+def test_cli_mapper_pe_budget_and_chips_flags(tmp_path):
+    from repro.mapper import hardware_candidates
+    from repro.mapper.space import QUICK_MAPPER
+    args = ("--sections", "mapper", "--workloads", "alexnet",
+            "--pe-budget", "32", "--chips", "1,2")
+    a = _cli(tmp_path, "ma", *args)
+    b = _cli(tmp_path, "mb", *args)
+    assert a["pe_budget"] == 32 and a["chips_list"] == [1, 2]
+    assert _no_elapsed(a["rows"]) == _no_elapsed(b["rows"])
+    # the flags reach the searched space: candidate count matches the
+    # constrained MapperConfig exactly
+    mcfg = dataclasses.replace(QUICK_MAPPER, sim_rounds=4, pe_budget=32,
+                               chips_list=(1, 2))
+    expected = len(hardware_candidates(mcfg))
+    row = next(r for r in a["rows"] if r["workload"] == "alexnet")
+    assert row["search"]["hardware_evaluated"] == expected
+    # narrower budget + package axis really is a different space: the
+    # default quick space has no 4-tuple (chips) points and admits shapes
+    # over 32 PEs
+    default = hardware_candidates(
+        dataclasses.replace(QUICK_MAPPER, sim_rounds=4))
+    constrained = hardware_candidates(mcfg)
+    assert set(constrained) != set(default)
+    assert any(len(hw) == 4 for hw in constrained)
+    assert all(len(hw) == 3 for hw in default)
