@@ -1,0 +1,136 @@
+"""Fault-tolerance subsystem: detour routing, tree repair, degraded sim.
+
+``run()`` produces four evidence groups for the BENCH trajectory:
+
+* ``faults_route`` — deadlock-safe detour derivation (west-first + up*/
+  down*) over every routable (src, dst) pair of a seeded faulted mesh:
+  routes/s and the routability fraction under each rule;
+* ``faults_plan`` — :func:`plan_collective` with tree repair over the
+  faulted corpus densities: repaired programs/s;
+* ``faults_verify`` — :func:`repro.analysis.verify.verify_faulted` over
+  the same corpus (fault-route / fault-turn / fault-remap classes + the
+  CDG pass on actual detour paths): artifacts/s, zero findings required;
+* ``faults_cluster`` — the request-level cluster simulator under a
+  seeded replica-failure trace and a fault-priced
+  :class:`~repro.serve.costs.DegradedCostModel`: events/s + goodput.
+
+Returns ``(csv lines, perf dict)``; ``benchmarks/run.py --sections
+faults`` lands the perf dict in the ``BENCH_<n>.json`` snapshot.
+"""
+import time
+
+_MESH_N = 8
+
+
+def _route_perf(quick: bool) -> dict:
+    from repro.core.noc.faults import (DETOUR_RULES, UnroutableError,
+                                       detour_route, seeded_faults)
+
+    n = 6 if quick else _MESH_N
+    faults = seeded_faults(n, n, link_rate=0.08, router_rate=0.02, seed=3)
+    nodes = [(x, y) for x in range(n) for y in range(n)
+             if faults.router_ok((x, y))]
+    pairs = [(s, d) for s in nodes for d in nodes if s != d]
+    out = {"mesh_n": n, "pairs": len(pairs)}
+    for rule in DETOUR_RULES:
+        t0 = time.time()
+        routed = 0
+        for s, d in pairs:
+            try:
+                detour_route(s, d, faults, n, n, rule=rule)
+                routed += 1
+            except UnroutableError:
+                pass
+        wall = time.time() - t0
+        out[rule] = {"routed": routed, "wall_s": wall,
+                     "routes_per_s": len(pairs) / max(wall, 1e-9),
+                     "routable_frac": routed / len(pairs)}
+    return out
+
+
+def _plan_perf(quick: bool) -> dict:
+    from repro.analysis.corpus import faulted_collective_programs
+
+    t0 = time.time()
+    programs = ops = 0
+    for _case, _cfg, _faults, prog in faulted_collective_programs(quick):
+        programs += 1
+        ops += len(prog)
+    wall = time.time() - t0
+    return {"programs": programs, "ops": ops, "wall_s": wall,
+            "programs_per_s": programs / max(wall, 1e-9)}
+
+
+def _verify_perf(quick: bool) -> dict:
+    from repro.analysis.corpus import faulted_collective_programs
+    from repro.analysis.verify import verify_faulted
+
+    t0 = time.time()
+    checked = findings = 0
+    for case, cfg, faults, prog in faulted_collective_programs(quick):
+        checked += 1
+        findings += len(verify_faulted(
+            prog, faults, cfg, op=case["op"],
+            participants=case["participants"],
+            algorithm=case["algorithm"], semantics=case["semantics"]))
+    wall = time.time() - t0
+    assert findings == 0, f"faulted corpus has {findings} finding(s)"
+    return {"artifacts": checked, "findings": findings, "wall_s": wall,
+            "artifacts_per_s": checked / max(wall, 1e-9)}
+
+
+def _cluster_perf(quick: bool) -> dict:
+    from repro.core.noc.faults import seeded_faults
+    from repro.core.noc.router import NocConfig
+    from repro.serve.cluster import ClusterSimulator, replica_failure_trace
+    from repro.serve.costs import (DegradedCostModel, SyntheticCostModel,
+                                   fault_slowdown)
+    from repro.serve.traffic import make_workload
+
+    n = 100 if quick else 400
+    reqs = make_workload(n, qps=2.0, prompt_dist="lognormal:128:0.5:512",
+                         gen_dist="uniform:32:128", seed=0)
+    horizon = max(r.arrival for r in reqs)
+    faults = seeded_faults(_MESH_N, _MESH_N, link_rate=0.08,
+                           router_rate=0.02, seed=3)
+    slowdown = fault_slowdown(faults, NocConfig(n=_MESH_N))
+    trace = replica_failure_trace(4, horizon, mtbf_s=horizon * 0.3,
+                                  mttr_s=horizon * 0.08, seed=0)
+    sim = ClusterSimulator(4, slots=8, block_size=16, max_seq=1024,
+                           prefill_chunk=64,
+                           cost=DegradedCostModel(SyntheticCostModel(),
+                                                  slowdown),
+                           failures=trace)
+    t0 = time.time()
+    m = sim.run(reqs)
+    wall = time.time() - t0
+    return {"requests": n, "fleet": 4, "failure_events": len(trace),
+            "slowdown": slowdown, "events": m["events"], "wall_s": wall,
+            "events_per_s": m["events"] / max(wall, 1e-9),
+            "goodput": m["goodput"], "retries": m["retries"],
+            "p99_e2e_s": m["e2e_s"]["p99"]}
+
+
+def run(quick: bool = False) -> tuple[list[str], dict]:
+    rt = _route_perf(quick)
+    pl = _plan_perf(quick)
+    vf = _verify_perf(quick)
+    cl = _cluster_perf(quick)
+    perf = {"route": rt, "plan": pl, "verify": vf, "cluster": cl}
+    wf, ud = rt["west_first"], rt["updown"]
+    lines = [
+        f"faults_route,{wf['wall_s'] * 1e6 / max(rt['pairs'], 1):.2f},"
+        f"pairs={rt['pairs']};wf_frac={wf['routable_frac']:.3f};"
+        f"ud_frac={ud['routable_frac']:.3f};"
+        f"routes_per_s={wf['routes_per_s']:.0f}",
+        f"faults_plan,{pl['wall_s'] * 1e6 / max(pl['programs'], 1):.0f},"
+        f"programs={pl['programs']};ops={pl['ops']};"
+        f"programs_per_s={pl['programs_per_s']:.1f}",
+        f"faults_verify,{vf['wall_s'] * 1e6 / max(vf['artifacts'], 1):.0f},"
+        f"artifacts={vf['artifacts']};findings={vf['findings']};"
+        f"artifacts_per_s={vf['artifacts_per_s']:.1f}",
+        f"faults_cluster,{cl['wall_s'] * 1e6 / max(cl['events'], 1):.2f},"
+        f"events={cl['events']};goodput={cl['goodput']:.3f};"
+        f"retries={cl['retries']};slowdown={cl['slowdown']:.3f}",
+    ]
+    return lines, perf

@@ -87,6 +87,13 @@ def _hierarchy(args):
     return lines
 
 
+def _faults(args):
+    from benchmarks import bench_faults
+    lines, perf = bench_faults.run(quick=args.quick)
+    _PERF["faults"] = perf
+    return lines
+
+
 def _roofline(args):
     if not os.path.exists("results/dryrun_singlepod.json"):
         return ["roofline_skipped,0,run_launch/dryrun_first"]
@@ -113,6 +120,7 @@ SECTIONS = {
     "serve": _serve,
     "analysis": _analysis,
     "hierarchy": _hierarchy,
+    "faults": _faults,
     "roofline": _roofline,
 }
 

@@ -2,7 +2,7 @@
 
 Two subcommands (EXPERIMENTS.md has the full walkthrough):
 
-``verify [--sections collectives,ws,hierarchy,schedules,plans,kvcache]``
+``verify [--sections collectives,ws,hierarchy,schedules,plans,faults,kvcache]``
     Statically verify the repo's artifacts without running the event
     loop: every tree collective (both semantics x both allreduce
     algorithms over three participant shapes), every distinct fig7-12
@@ -152,6 +152,41 @@ def _section_plans(args) -> tuple[int, list]:
     return checked, findings
 
 
+def _section_faults(args) -> tuple[int, list]:
+    """Fault-repaired artifacts (DESIGN.md S15): every faulted corpus
+    program passes the fault classes (clear routes, one turn rule, remap
+    closure), the full fold/deliver algebra over the usable set, the CDG
+    deadlock check on the actual detour paths, and the compiled-lowering
+    conservation pass; faulted hierarchy schedules keep the S14
+    invariants with a failed chip excluded end to end."""
+    from repro.core.noc.compiled import compile_program
+    from .corpus import faulted_collective_programs, faulted_hier_schedules
+    from .verify import verify_faulted
+    findings: list = []
+    checked = 0
+    for case, cfg, faults, prog in \
+            faulted_collective_programs(quick=args.quick):
+        checked += 1
+        where = (f"faulted[{case['fault']}] {case['op']}/"
+                 f"{case['semantics']}/{case['algorithm']}/{case['label']}")
+        fs = verify_faulted(prog, faults, cfg, op=case["op"],
+                            participants=case["participants"],
+                            algorithm=case["algorithm"],
+                            semantics=case["semantics"])
+        cp = compile_program(prog, cfg)
+        fs += verify_compiled(cp, prog, cfg)
+        findings += [Finding(f.check, f"{where}: {f.where}", f.message)
+                     for f in fs]
+    for case, faults, sched in faulted_hier_schedules(quick=args.quick):
+        checked += 1
+        cx, cy = case["grid"]
+        where = (f"faulted-hier {cx}x{cy}/{case['op']}/"
+                 f"{case['semantics']}")
+        findings += [Finding(f.check, f"{where}: {f.where}", f.message)
+                     for f in verify_hier_schedule(sched)]
+    return checked, findings
+
+
 def _section_kvcache(args) -> tuple[int, list]:
     """A deterministic allocator scenario: interleaved alloc/extend/free
     with failure paths, verified after every step."""
@@ -207,6 +242,7 @@ _SECTIONS = {
     "hierarchy": _section_hierarchy,
     "schedules": _section_schedules,
     "plans": _section_plans,
+    "faults": _section_faults,
     "kvcache": _section_kvcache,
 }
 

@@ -93,6 +93,88 @@ def hier_schedules(quick: bool = False, cfg: Optional[NocConfig] = None,
         yield case, sched
 
 
+#: Seeded fault densities the faulted corpus sweeps (DESIGN.md S15).
+#: Rates are per-link / per-router / per-PE Bernoulli draws from one
+#: ``random.Random(seed)`` stream — the corpus is a pure function of
+#: these literals.
+FAULT_SPECS = (
+    {"label": "light", "link_rate": 0.04, "router_rate": 0.0,
+     "pe_rate": 0.0, "seed": 3},
+    {"label": "medium", "link_rate": 0.08, "router_rate": 0.02,
+     "pe_rate": 0.05, "seed": 11},
+    {"label": "heavy", "link_rate": 0.15, "router_rate": 0.05,
+     "pe_rate": 0.08, "seed": 23},
+)
+#: Faulted programs plan on a 6x6 chip so detours have room to exist.
+FAULT_MESH_N = 6
+
+
+def fault_models(quick: bool = False) -> Iterator[tuple]:
+    """``(spec, FaultModel)`` for every :data:`FAULT_SPECS` density
+    (quick keeps the lightest)."""
+    from repro.core.noc.faults import seeded_faults
+    for spec in FAULT_SPECS[:1] if quick else FAULT_SPECS:
+        yield spec, seeded_faults(
+            FAULT_MESH_N, FAULT_MESH_N, link_rate=spec["link_rate"],
+            router_rate=spec["router_rate"], pe_rate=spec["pe_rate"],
+            seed=spec["seed"])
+
+
+def faulted_collective_programs(quick: bool = False,
+                                payload_bits: float = 512.0
+                                ) -> Iterator[tuple]:
+    """``(case, cfg, faults, program)``: the full collective matrix
+    (op x semantics x allreduce algorithm over the full mesh and a
+    scattered set) repaired under every corpus fault density."""
+    cfg = NocConfig(n=FAULT_MESH_N)
+    n = FAULT_MESH_N
+    full = [(x, y) for x in range(n) for y in range(n)]
+    scattered = [(0, 0), (n - 1, 1), (1, n - 1), (n - 2, n - 2)]
+    for spec, faults in fault_models(quick):
+        for label, parts in (("full", full), ("scattered", scattered)):
+            for op in COLLECTIVE_OPS:
+                for semantics in SEMANTICS:
+                    algorithms = ALLREDUCE_ALGORITHMS \
+                        if op == "allreduce" else ("reduce_bcast",)
+                    for algorithm in algorithms:
+                        prog = plan_collective(
+                            op, parts, payload_bits, cfg,
+                            algorithm=algorithm, semantics=semantics,
+                            faults=faults)
+                        case = {"label": label, "op": op,
+                                "participants": parts,
+                                "semantics": semantics,
+                                "algorithm": algorithm,
+                                "fault": spec["label"]}
+                        yield case, cfg, faults, prog
+
+
+def faulted_hier_schedules(quick: bool = False,
+                           payload_bits: float = 4096.0) -> Iterator[tuple]:
+    """``(case, faults, schedule)``: hierarchical collectives with
+    link-only on-die faults (chip roots stay alive, so the chip-root
+    invariant of ``verify_hier_schedule`` still binds) and one failed
+    chip on the larger grid."""
+    from repro.core.noc.faults import seeded_faults
+    from repro.core.noc.hierarchy import (HIER_OPS, HierarchicalMesh,
+                                          plan_hier_collective)
+    faults = seeded_faults(FAULT_MESH_N, FAULT_MESH_N, link_rate=0.08,
+                           seed=5)
+    grids = HIER_GRIDS_QUICK if quick else HIER_GRIDS
+    for grid in grids:
+        failed = (grid[0] * grid[1] - 1,) if grid[0] * grid[1] > 2 else ()
+        hmesh = HierarchicalMesh(chip_w=FAULT_MESH_N, chip_h=FAULT_MESH_N,
+                                 chips_x=grid[0], chips_y=grid[1])
+        for op in HIER_OPS:
+            for semantics in SEMANTICS:
+                sched = plan_hier_collective(
+                    op, hmesh, payload_bits, semantics=semantics,
+                    faults=faults, failed_chips=failed)
+                case = {"grid": grid, "op": op, "semantics": semantics,
+                        "failed_chips": failed}
+                yield case, faults, sched
+
+
 def ws_plan_shapes(quick: bool = False,
                    cfg: Optional[NocConfig] = None) -> list[dict]:
     """Every distinct fig7-12 per-layer plan shape.

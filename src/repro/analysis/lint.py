@@ -52,10 +52,11 @@ from typing import Callable, Optional, Sequence
 from .findings import Finding
 
 #: Modules bound to the determinism contract: simulation/cost, planning,
-#: serving, mapper search.  experiments/, launch/, exec/ stay out — they
-#: report wall time and write logs by design.
+#: serving, mapper search, the fault-tolerant runtime.  experiments/,
+#: launch/, exec/ stay out — they report wall time and write logs by
+#: design (duration reporting routes through ``exec.timing.Stopwatch``).
 _DETERMINISM_SCOPE = ("repro/core/noc/", "repro/plan/", "repro/serve/",
-                      "repro/mapper/")
+                      "repro/mapper/", "repro/runtime/")
 
 PRAGMA = "lint: allow"
 _PRAGMA_RE = re.compile(r"#\s*lint:\s*allow\(([a-z-]+(?:\s*,\s*[a-z-]+)*)\)")

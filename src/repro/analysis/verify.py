@@ -42,6 +42,13 @@ The checks (ids are the ``Finding.check`` vocabulary):
     Paged-KV free-list invariants: no block both free and mapped, no
     aliasing across tables, free + live == total, per-request lengths
     covered by their block tables.
+``fault-route`` / ``fault-turn`` / ``fault-remap``
+    Fault-repaired programs (DESIGN.md S15): no route crosses a failed
+    link or router; every detour path is legal under a *single* turn
+    rule for the whole program (west-first or up*/down* — mixing rules
+    voids the per-rule deadlock argument); no dead or fabric-stranded PE
+    appears in the contribution algebra, and the repaired collective
+    folds/delivers exactly once over the usable participant set.
 """
 from __future__ import annotations
 
@@ -59,7 +66,8 @@ Coord = tuple
 __all__ = [
     "verify_program", "verify_collective", "verify_compiled",
     "verify_schedule", "verify_hier_schedule", "verify_plan",
-    "verify_allocator", "verify_kvcache", "check_program",
+    "verify_allocator", "verify_kvcache", "verify_faulted",
+    "check_program",
 ]
 
 
@@ -746,6 +754,96 @@ def _plan_layer_findings(plan) -> list[Finding]:
                 "plan-tile", f"{where} gemm {layer.name}",
                 f"no tile choice covers GEMM shape "
                 f"{(layer.M, layer.K, layer.N)} at dtype {plan.dtype}"))
+    return out
+
+
+# --------------------------------------------------------------------------- #
+# Fault-repaired programs (DESIGN.md S15)
+# --------------------------------------------------------------------------- #
+def verify_faulted(prog: Sequence, faults, cfg: Optional[NocConfig] = None,
+                   *, op: Optional[str] = None,
+                   participants: Optional[Iterable] = None,
+                   root=None, algorithm: str = "reduce_bcast",
+                   semantics: str = "ina") -> list[Finding]:
+    """Check a fault-repaired program against its FaultModel.
+
+    Runs the structural pass (:func:`verify_program`, including the CDG
+    deadlock check over the actual detour paths) and adds the fault
+    classes: ``fault-route`` (no failed link/router on any route — an op
+    without a path override is checked on the XY route the engines would
+    derive), ``fault-turn`` (one turn rule covers every path), and, when
+    collective metadata is supplied, ``fault-remap`` (the algebra closes
+    over the usable participant set: dead or stranded PEs appear nowhere)
+    plus the full fold/deliver-exactly-once pass over that set.
+    """
+    from repro.core.noc.faults import (path_is_updown, path_is_west_first,
+                                       remap_participants, remap_root)
+    from repro.core.noc.topology import xy_route_tuple
+    cfg = NocConfig() if cfg is None else cfg
+    width, height = cfg.width, cfg.height
+    out = verify_program(prog, cfg)
+    if faults.transient:
+        out.append(Finding(
+            "fault-route", "model",
+            "FaultModel still carries transient faults — resolve a window "
+            "with at_window() before planning/verifying"))
+    routed: list[tuple[str, tuple]] = []
+    for i, o in enumerate(prog):
+        if _is_virtual(o):
+            continue
+        where = f"op {i}" + (f" [{o.tag}]" if o.tag else "")
+        if o.path is not None:
+            path = tuple(tuple(n) for n in o.path)
+        else:
+            path = xy_route_tuple(tuple(o.src), tuple(o.dst))
+        for node in path:
+            if not faults.router_ok(node):
+                out.append(Finding("fault-route", where,
+                                   f"route visits failed router {node}"))
+        for a, b in zip(path, path[1:]):
+            if not faults.link_ok(a, b):
+                out.append(Finding("fault-route", where,
+                                   f"route crosses failed link {a}<->{b}"))
+        if len(path) > 2:            # 1-hop paths are legal under any rule
+            routed.append((where, path))
+    wf = {w for w, p in routed if path_is_west_first(p)}
+    ud = {w for w, p in routed
+          if path_is_updown(p, faults, width, height)}
+    every = {w for w, _ in routed}
+    if not (wf >= every or ud >= every):
+        for where, _ in routed:
+            if where not in wf and where not in ud:
+                out.append(Finding(
+                    "fault-turn", where,
+                    "detour path is legal under neither the west-first "
+                    "nor the up*/down* turn rule"))
+        if every - wf and every - ud and not (every - wf - ud):
+            out.append(Finding(
+                "fault-turn", "program",
+                "paths mix west-first-only and updown-only detours — no "
+                "single turn rule covers the program, so the per-rule "
+                "deadlock argument does not apply"))
+    if op is None or participants is None:
+        return out
+    healthy, _ = remap_participants(participants, faults, width, height)
+    usable = frozenset(healthy)
+    for i, o in enumerate(prog):
+        where = f"op {i}" + (f" [{o.tag}]" if o.tag else "")
+        for p in sorted(frozenset(o.contribs) - usable):
+            out.append(Finding(
+                "fault-remap", where,
+                f"dead/stranded PE {p} still contributes — its operand "
+                f"was not remapped to a healthy neighbor"))
+        for p in sorted(frozenset(o.delivers) - usable):
+            out.append(Finding(
+                "fault-remap", where,
+                f"delivery targets dead/stranded PE {p}"))
+    parts0 = sorted(set(tuple(p) for p in participants))
+    r = remap_root(parts0[0] if root is None else tuple(root),
+                   healthy, faults)
+    out.extend(verify_collective(prog, op=op, participants=healthy,
+                                 root=r, algorithm=algorithm,
+                                 semantics=semantics))
     return out
 
 

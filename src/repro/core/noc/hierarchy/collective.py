@@ -186,25 +186,53 @@ def _package_program(op: str, chips: list[Coord], payload_bits: float,
 # --------------------------------------------------------------------------- #
 # the hierarchical planner
 # --------------------------------------------------------------------------- #
+def _chip_faults(faults, chip: int):
+    """Resolve the on-die fault model for one chip: ``faults`` is either a
+    single FaultModel every chip shares or a ``{chip: FaultModel}``
+    mapping (missing chips are clean)."""
+    if faults is None:
+        return None
+    if hasattr(faults, "get"):
+        return faults.get(chip)
+    return faults
+
+
 def plan_hier_collective(op: str, hmesh: HierarchicalMesh,
                          payload_bits: float,
                          cfg: NocConfig = NocConfig(), *,
                          participants: Optional[Iterable[HierCoord]] = None,
                          root: Optional[HierCoord] = None,
                          algorithm: str = "reduce_bcast",
-                         semantics: str = "ina") -> HierarchicalSchedule:
+                         semantics: str = "ina",
+                         faults=None,
+                         failed_chips: Iterable[int] = (),
+                         ) -> HierarchicalSchedule:
     """Lower a collective over ``(chip, x, y)`` participants into levels.
 
     ``participants`` defaults to every PE of the hierarchy; ``root``
     defaults to the first participant.  With all participants on one chip
     the result is a single ``"flat"`` level carrying exactly the flat
     ``plan_collective`` program (degenerate equivalence).
+
+    ``faults`` injects *on-die* faults into every chip-scope lane (a
+    shared FaultModel or a per-chip mapping; see :func:`_chip_faults`) —
+    each chip's trees are repaired on its own fabric while the package
+    lane, whose express/mesh channels are a separate network, stays
+    clean.  ``failed_chips`` models whole-chip loss: their PEs drop out
+    of the participant set (and the package lane, since it only spans
+    populated chips); a root on a failed chip remaps to the first
+    surviving participant.
     """
     assert op in HIER_OPS, op
     assert semantics in SEMANTICS, semantics
     assert algorithm in ALLREDUCE_ALGORITHMS, algorithm
     parts = sorted(set(participants)) if participants is not None \
         else sorted(hmesh.nodes())
+    failed = frozenset(failed_chips)
+    if failed:
+        parts = [p for p in parts if p[0] not in failed]
+        if root is not None and root[0] in failed:
+            root = None
     assert parts, "empty participant set"
     root = parts[0] if root is None else root
     assert root in parts, f"root {root} is not a participant"
@@ -221,7 +249,8 @@ def plan_hier_collective(op: str, hmesh: HierarchicalMesh,
         chip, xy = next(iter(by_chip.items()))
         prog = plan_collective(op, xy, payload_bits, chip_cfg,
                                root=(root[1], root[2]),
-                               algorithm=algorithm, semantics=semantics)
+                               algorithm=algorithm, semantics=semantics,
+                               faults=_chip_faults(faults, chip))
         lane = HierLane(label=f"chip{chip}", scope="chip", cfg=chip_cfg,
                         prog=tuple(prog), chip=chip)
         return sched([HierLevel(name="flat", lanes=(lane,))])
@@ -236,7 +265,8 @@ def plan_hier_collective(op: str, hmesh: HierarchicalMesh,
         lanes = []
         for chip in tag_chips:
             prog = plan_collective(cop, by_chip[chip], payload_bits,
-                                   chip_cfg, root=rxy, semantics=semantics)
+                                   chip_cfg, root=rxy, semantics=semantics,
+                                   faults=_chip_faults(faults, chip))
             lanes.append(HierLane(label=f"chip{chip}", scope="chip",
                                   cfg=chip_cfg, prog=tuple(prog), chip=chip))
         return tuple(lanes)

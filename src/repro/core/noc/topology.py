@@ -50,6 +50,21 @@ def _trim(cache: dict) -> None:
         ROUTE_STATS["evicted"] += 1
 
 
+def memo_route(key, derive) -> tuple:
+    """Memoize an arbitrary derived route in the bounded route cache.
+
+    The fault layer (:mod:`~repro.core.noc.faults`) keys detour routes as
+    ``(src, dst, fault_key)`` — disjoint from the plain ``(src, dst)`` XY
+    keys, so one fault set can never serve another's (or the clean mesh's)
+    entries, while sharing the same FIFO bound and eviction stats.
+    """
+    hit = _ROUTE_CACHE.get(key)
+    if hit is None:
+        hit = _ROUTE_CACHE[key] = tuple(derive())
+        _trim(_ROUTE_CACHE)
+    return hit
+
+
 @dataclass(frozen=True)
 class Mesh:
     """A W x H 2D mesh.  Nodes are (x, y) with x = column, y = row.
@@ -79,6 +94,14 @@ class Mesh:
     @property
     def num_nodes(self) -> int:
         return self.width * self.height
+
+    def seeded_faults(self, **rates):
+        """A deterministic :class:`~repro.core.noc.faults.FaultModel` for
+        this mesh's shape (see :func:`~repro.core.noc.faults.seeded_faults`
+        for the rate/seed knobs).  Lazy import: ``faults`` depends on this
+        module."""
+        from .faults import seeded_faults
+        return seeded_faults(self.width, self.height, **rates)
 
 
 def xy_route_uncached(src: tuple[int, int],

@@ -18,7 +18,6 @@ Straggler mitigation (documented design, enforced where expressible here):
 from __future__ import annotations
 
 import signal
-import time
 from dataclasses import dataclass, field
 from typing import Callable, Optional
 
@@ -26,6 +25,7 @@ import jax
 import numpy as np
 
 from repro.checkpoint.ckpt import CheckpointManager
+from repro.exec.timing import Stopwatch
 
 
 @dataclass
@@ -38,7 +38,15 @@ class FTConfig:
 
 
 class PreemptionGuard:
-    """SIGTERM/SIGINT -> finish the current step, checkpoint, exit cleanly."""
+    """SIGTERM/SIGINT -> finish the current step, checkpoint, exit cleanly.
+
+    The first signal only sets ``requested`` (the loop drains the current
+    step, then checkpoints).  It also restores the original handlers, so
+    a *second* signal is not swallowed: SIGINT raises KeyboardInterrupt
+    immediately (``run_training`` force-saves on that path) and SIGTERM
+    gets its pre-guard disposition — an operator pressing Ctrl-C twice
+    means *now*, not *after this step*.
+    """
 
     def __init__(self):
         self.requested = False
@@ -51,10 +59,15 @@ class PreemptionGuard:
 
     def _handler(self, signum, frame):
         self.requested = True
+        self._restore()
 
-    def __exit__(self, *exc):
+    def _restore(self):
         for sig, orig in self._orig.items():
             signal.signal(sig, orig)
+        self._orig = {}
+
+    def __exit__(self, *exc):
+        self._restore()
         return False
 
 
@@ -97,27 +110,33 @@ def run_training(step_fn: Callable, state, batch_fn: Callable, *,
     watch = StragglerWatch(factor=ft.timeout_factor)
     with PreemptionGuard() as guard:
         step = start
-        while step < num_steps:
-            batch = batch_fn(step)
-            t0 = time.time()
-            for attempt in range(ft.max_step_retries + 1):
-                try:
-                    state, metrics = step_fn(state, batch)
+        try:
+            while step < num_steps:
+                batch = batch_fn(step)
+                sw = Stopwatch()
+                for attempt in range(ft.max_step_retries + 1):
+                    try:
+                        state, metrics = step_fn(state, batch)
+                        break
+                    except jax.errors.JaxRuntimeError:  # transient device err
+                        if attempt == ft.max_step_retries:
+                            mgr.maybe_save(state, step, force=True)
+                            raise
+                dt = sw.seconds
+                if watch.observe(step, dt) and on_straggler:
+                    on_straggler(step, dt)
+                if on_metrics:
+                    on_metrics(step, metrics, dt)
+                mgr.maybe_save(state, step)
+                if guard.requested:
+                    mgr.maybe_save(state, step, force=True)
                     break
-                except jax.errors.JaxRuntimeError:    # transient device error
-                    if attempt == ft.max_step_retries:
-                        mgr.maybe_save(state, step, force=True)
-                        raise
-            dt = time.time() - t0
-            if watch.observe(step, dt) and on_straggler:
-                on_straggler(step, dt)
-            if on_metrics:
-                on_metrics(step, metrics, dt)
-            mgr.maybe_save(state, step)
-            if guard.requested:
-                mgr.maybe_save(state, step, force=True)
-                break
-            step += 1
+                step += 1
+        except KeyboardInterrupt:
+            # Second Ctrl-C (the guard restored the default handler):
+            # checkpoint the last completed state and leave immediately.
+            mgr.maybe_save(state, step, force=True)
+            raise
     return state, step, watch.events
 
 

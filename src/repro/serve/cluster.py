@@ -16,11 +16,24 @@ then runs one decode step over every slot still needing tokens.  The event
 loop is a plain heap with an insertion-order tiebreak, all arithmetic is
 python floats, and no wall-clock enters any record — same seed, same
 bytes.
+
+Degradation (DESIGN.md S15): a seeded replica-failure trace
+(:func:`replica_failure_trace`, or explicit ``(t, instance, kind)``
+events) takes instances down and up mid-run.  Going down evicts the
+instance's in-flight requests — their progress is lost, and each re-enters
+the cluster after a capped exponential backoff, keeping its *original*
+arrival so e2e/TTFT absorb every retry — and re-dispatches its queued
+(never-started) requests immediately.  A request evicted more than
+``max_retries`` times fails; completed/submitted is the run's goodput.
+In-flight iteration completions from before the failure are dropped by an
+epoch counter.  An empty trace leaves every code path and record
+byte-identical to the fault-free simulator.
 """
 from __future__ import annotations
 
 import heapq
 import math
+import random
 
 from repro.serve.batching import Request, Scheduler
 from repro.serve.kvcache import BlockAllocator
@@ -55,16 +68,45 @@ class _Instance:
         self.kv = SimKV(block_size, num_blocks)
         self.sched = Scheduler(slots, self.kv, policy)
         self.busy = False
+        self.down = False          # replica failed (dispatch skips it)
+        self.epoch = 0             # bumped per failure; stale iters drop
         self.work = 0              # outstanding work units (dispatch key)
         self.iterations = 0
         self._grants: list = []    # (slot, tokens, is_first) for this iter
+
+
+def replica_failure_trace(fleet: int, horizon_s: float, *,
+                          mtbf_s: float, mttr_s: float,
+                          seed: int = 0) -> list[tuple]:
+    """Seeded alternating down/up events, ``(t, instance, kind)`` sorted.
+
+    Per instance, time-to-failure and time-to-repair are exponential draws
+    (``mtbf_s`` / ``mttr_s`` means) from one ``random.Random(seed)``
+    stream in fixed instance order — the trace is a pure function of its
+    arguments.  Events past ``horizon_s`` are dropped; an instance down at
+    the horizon simply stays down."""
+    rng = random.Random(seed)
+    events: list[tuple] = []
+    for idx in range(fleet):
+        t = rng.expovariate(1.0 / mtbf_s)
+        while t < horizon_s:
+            events.append((round(t, 9), idx, "down"))
+            t += rng.expovariate(1.0 / mttr_s)
+            if t >= horizon_s:
+                break
+            events.append((round(t, 9), idx, "up"))
+            t += rng.expovariate(1.0 / mtbf_s)
+    events.sort()
+    return events
 
 
 class ClusterSimulator:
     def __init__(self, fleet: int, *, slots: int = 8, block_size: int = 16,
                  num_blocks: int | None = None, max_seq: int = 1024,
                  prefill_chunk: int = 64, cost=None, policy: str = "fcfs",
-                 ) -> None:
+                 failures: "list[tuple] | None" = None,
+                 max_retries: int = 3, retry_backoff_s: float = 0.5,
+                 retry_backoff_cap_s: float = 8.0) -> None:
         if fleet <= 0:
             raise ValueError("fleet must be positive")
         if cost is None:
@@ -76,16 +118,33 @@ class ClusterSimulator:
         self.prefill_chunk = prefill_chunk
         self.instances = [_Instance(i, slots, block_size, num_blocks, policy)
                           for i in range(fleet)]
+        self.failures = list(failures or ())
+        for t, idx, kind in self.failures:
+            if kind not in ("down", "up") or not 0 <= idx < fleet:
+                raise ValueError(f"bad failure event {(t, idx, kind)!r}")
+        self.max_retries = max_retries
+        self.retry_backoff_s = retry_backoff_s
+        self.retry_backoff_cap_s = retry_backoff_cap_s
         self.records: list[dict] = []
         self.events = 0
+        self.retries = 0
+        self.downtime_events = 0
+        self.failed_requests: list = []
+        self._attempts: dict = {}       # rid -> eviction count
+        self._pending: list = []        # arrivals while every replica down
 
     # ------------------------------------------------------------------ #
     def _work_units(self, req: Request) -> int:
         return req.max_new + math.ceil(req.prompt_len / self.prefill_chunk)
 
-    def _dispatch(self, req: Request) -> _Instance:
-        """Least-outstanding-work instance, lowest index on ties."""
-        return min(self.instances, key=lambda inst: (inst.work, inst.idx))
+    def _dispatch(self, req: Request) -> "_Instance | None":
+        """Least-outstanding-work *up* instance, lowest index on ties;
+        ``None`` when the whole fleet is down (caller parks the request
+        until the next ``up`` event)."""
+        up = [inst for inst in self.instances if not inst.down]
+        if not up:
+            return None
+        return min(up, key=lambda inst: (inst.work, inst.idx))
 
     def _start_iteration(self, inst: _Instance, t: float, push) -> None:
         admitted = inst.sched.admit(now=t)
@@ -118,7 +177,7 @@ class ClusterSimulator:
         inst._grants = grants
         inst.busy = True
         inst.iterations += 1
-        push(t + dt, "iter", inst)
+        push(t + dt, "iter", (inst, inst.epoch))
 
     def _end_iteration(self, inst: _Instance, t: float, push) -> None:
         for slot, gained, is_first in inst._grants:
@@ -142,6 +201,32 @@ class ClusterSimulator:
             })
         self._start_iteration(inst, t, push)
 
+    def _fail_instance(self, inst: _Instance, t: float, push) -> None:
+        """Take a replica down: in-flight requests lose their progress and
+        retry with capped exponential backoff (or fail past the retry
+        budget); queued-but-unstarted requests re-dispatch at once."""
+        if inst.down:
+            return
+        inst.down = True
+        inst.epoch += 1          # any in-flight iter completion is stale
+        inst.busy = False
+        inst._grants = []
+        self.downtime_events += 1
+        for slot in sorted(inst.sched.active):
+            st = inst.sched.finish(slot, now=t)
+            req = st.req
+            k = self._attempts[req.rid] = self._attempts.get(req.rid, 0) + 1
+            if k > self.max_retries:
+                self.failed_requests.append(req.rid)
+                continue
+            self.retries += 1
+            backoff = min(self.retry_backoff_cap_s,
+                          self.retry_backoff_s * 2 ** (k - 1))
+            push(t + backoff, "arrival", req)
+        while len(inst.sched.queue):
+            push(t, "arrival", inst.sched.queue.pop())
+        inst.work = 0
+
     # ------------------------------------------------------------------ #
     def run(self, requests: list[Request],
             max_events: int = 5_000_000) -> dict:
@@ -153,6 +238,8 @@ class ClusterSimulator:
             heapq.heappush(heap, (t, seq, kind, payload))
             seq += 1
 
+        for ev in sorted(self.failures):
+            push(ev[0], ev[2], ev[1])
         for req in sorted(requests, key=lambda r: (r.arrival, r.rid)):
             push(req.arrival, "arrival", req)
 
@@ -163,12 +250,25 @@ class ClusterSimulator:
             self.events += 1
             if kind == "arrival":
                 inst = self._dispatch(payload)
+                if inst is None:
+                    self._pending.append(payload)
+                    continue
                 inst.work += self._work_units(payload)
                 inst.sched.submit(payload)
                 if not inst.busy:
                     self._start_iteration(inst, t, push)
-            else:
-                self._end_iteration(payload, t, push)
+            elif kind == "iter":
+                inst, epoch = payload
+                if epoch != inst.epoch:
+                    continue         # completed on a replica that failed
+                self._end_iteration(inst, t, push)
+            elif kind == "down":
+                self._fail_instance(self.instances[payload], t, push)
+            else:                    # "up"
+                self.instances[payload].down = False
+                parked, self._pending = self._pending, []
+                for req in parked:
+                    push(t, "arrival", req)
 
         metrics = summarize(self.records)
         metrics["fleet"] = len(self.instances)
@@ -177,6 +277,10 @@ class ClusterSimulator:
         metrics["per_instance_requests"] = [
             sum(1 for r in self.records if r["instance"] == i.idx)
             for i in self.instances]
+        metrics["goodput"] = len(self.records) / max(1, len(requests))
+        metrics["retries"] = self.retries
+        metrics["failed_requests"] = len(self.failed_requests)
+        metrics["downtime_events"] = self.downtime_events
         return metrics
 
 

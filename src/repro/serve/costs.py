@@ -113,6 +113,44 @@ class PlanCostModel:
 
 
 @dataclasses.dataclass(frozen=True)
+class DegradedCostModel:
+    """A cost model slowed by on-die faults (DESIGN.md S15).
+
+    Wraps any step-cost model and scales every latency by ``slowdown`` —
+    the faulted/clean collective latency ratio from the same simulated
+    mesh (see :func:`fault_slowdown`), so the cluster simulator prices a
+    degraded replica without replanning."""
+
+    base: object
+    slowdown: float = 1.0
+
+    def prefill_chunk_seconds(self) -> float:
+        return self.base.prefill_chunk_seconds() * self.slowdown
+
+    def decode_iter_seconds(self, n_active: int) -> float:
+        return self.base.decode_iter_seconds(n_active) * self.slowdown
+
+
+def fault_slowdown(faults, cfg=None, *, payload_bits: float = 4096.0,
+                   semantics: str = "ina") -> float:
+    """Faulted/clean allreduce latency ratio on ``cfg``'s mesh — the
+    single scalar :class:`DegradedCostModel` scales a replica's step
+    costs by.  An empty model returns exactly 1.0; the ratio is clamped
+    at 1.0 from below (the repair BFS can emit a *shallower* tree than
+    the clean XY embedding, but a degraded replica never speeds up)."""
+    from repro.core.noc.collective.cost import collective_cost
+    from repro.core.noc.router import NocConfig
+    cfg = NocConfig() if cfg is None else cfg
+    if faults is None or faults.empty:
+        return 1.0
+    clean = collective_cost("allreduce", payload_bits, cfg,
+                            semantics=semantics)
+    faulted = collective_cost("allreduce", payload_bits, cfg,
+                              semantics=semantics, faults=faults)
+    return max(1.0, faulted.latency_cycles / max(1, clean.latency_cycles))
+
+
+@dataclasses.dataclass(frozen=True)
 class SyntheticCostModel:
     """Fixed latencies for unit tests (no plans, no NoC)."""
 

@@ -1,0 +1,155 @@
+"""Fault-tolerant runtime: step retry, straggler watch, resume cadence,
+preemption double-signal semantics (DESIGN.md S15)."""
+import signal
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.checkpoint.ckpt import CheckpointManager, latest_step
+from repro.runtime.fault_tolerance import (FTConfig, PreemptionGuard,
+                                           StragglerWatch, run_training)
+
+
+def _counting_step(fail_at=None, fail_times=1, calls=None, failures=None):
+    """A step_fn raising JaxRuntimeError ``fail_times`` times at step
+    ``fail_at`` (transient device error), succeeding otherwise."""
+    calls = calls if calls is not None else []
+    failures = failures if failures is not None else []
+
+    def step_fn(state, batch):
+        step = int(state["step"])
+        calls.append(step)
+        if step == fail_at and failures.count(step) < fail_times:
+            failures.append(step)
+            raise jax.errors.JaxRuntimeError("injected transient fault")
+        return {"step": state["step"] + 1}, {"loss": 0.0}
+
+    return step_fn, calls, failures
+
+
+# --------------------------------------------------------------------------- #
+# retry
+# --------------------------------------------------------------------------- #
+def test_transient_fault_retried_in_place(tmp_path):
+    step_fn, calls, failures = _counting_step(fail_at=2, fail_times=1)
+    ft = FTConfig(ckpt_dir=str(tmp_path), ckpt_every=100,
+                  max_step_retries=2)
+    state, last, _ = run_training(step_fn, {"step": jnp.asarray(0)},
+                                  lambda s: {}, ft=ft, num_steps=4)
+    assert int(state["step"]) == 4 and last == 4
+    # step 2 ran twice (failed attempt + retry), every other step once
+    assert calls == [0, 1, 2, 2, 3]
+    assert failures == [2]
+
+
+def test_persistent_fault_force_saves_then_raises(tmp_path):
+    step_fn, calls, _ = _counting_step(fail_at=2, fail_times=99)
+    ft = FTConfig(ckpt_dir=str(tmp_path), ckpt_every=100,
+                  max_step_retries=2)
+    with pytest.raises(jax.errors.JaxRuntimeError):
+        run_training(step_fn, {"step": jnp.asarray(0)}, lambda s: {},
+                     ft=ft, num_steps=4)
+    # all retries consumed: 1 + max_step_retries attempts at the bad step
+    assert calls.count(2) == 3
+    # the pre-raise force-save landed: last completed state (step 2) is
+    # restorable, so a restart loses nothing
+    assert latest_step(str(tmp_path)) == 2
+
+
+# --------------------------------------------------------------------------- #
+# straggler watch
+# --------------------------------------------------------------------------- #
+def test_straggler_watch_event_contents():
+    w = StragglerWatch(factor=3.0)
+    for step in range(5):                    # build the trailing median
+        assert not w.observe(step, 1.0)
+    assert w.observe(5, 10.0)                # 10x the median -> event
+    assert not w.observe(6, 1.1)             # back to normal
+    assert len(w.events) == 1
+    step, seconds, median = w.events[0]
+    assert step == 5 and seconds == 10.0 and median == 1.0
+
+
+def test_straggler_callback_fires(tmp_path):
+    # Make observed durations deterministic by monkeypatching the watch
+    # through recorded wall times is overkill here: drive observe()
+    # indirectly with a sleepless step and assert no spurious events.
+    step_fn, _, _ = _counting_step()
+    ft = FTConfig(ckpt_dir=str(tmp_path), ckpt_every=100)
+    events = []
+    _, _, watch_events = run_training(
+        step_fn, {"step": jnp.asarray(0)}, lambda s: {}, ft=ft,
+        num_steps=8, on_straggler=lambda step, dt: events.append(step))
+    assert events == [s for s, *_ in watch_events]
+
+
+# --------------------------------------------------------------------------- #
+# resume cadence
+# --------------------------------------------------------------------------- #
+def test_resume_restarts_at_checkpoint_step_plus_one(tmp_path):
+    # seed the directory with a checkpoint at step 3
+    mgr = CheckpointManager(str(tmp_path), every=1)
+    mgr.maybe_save({"step": jnp.asarray(4)}, 3, force=True)
+    step_fn, calls, _ = _counting_step()
+    ft = FTConfig(ckpt_dir=str(tmp_path), ckpt_every=100)
+    state, last, _ = run_training(step_fn, {"step": jnp.asarray(0)},
+                                  lambda s: {}, ft=ft, num_steps=6)
+    # step 3 already completed (its state is the checkpoint): execution
+    # resumes at 4, never re-running a completed step
+    assert calls == [4, 5]
+    assert int(state["step"]) == 6 and last == 6
+
+
+# --------------------------------------------------------------------------- #
+# preemption: first signal drains, second signal exits now
+# --------------------------------------------------------------------------- #
+def test_single_signal_finishes_step_and_checkpoints(tmp_path):
+    calls = []
+
+    def step_fn(state, batch):
+        step = int(state["step"])
+        calls.append(step)
+        if step == 1:
+            signal.raise_signal(signal.SIGINT)
+        return {"step": state["step"] + 1}, {}
+
+    ft = FTConfig(ckpt_dir=str(tmp_path), ckpt_every=100)
+    state, last, _ = run_training(step_fn, {"step": jnp.asarray(0)},
+                                  lambda s: {}, ft=ft, num_steps=10)
+    # the signalled step still completed, then the loop checkpointed and
+    # left cleanly — no KeyboardInterrupt escapes
+    assert calls == [0, 1]
+    assert int(state["step"]) == 2
+    assert latest_step(str(tmp_path)) == 1
+
+
+def test_guard_restores_handlers_after_first_signal():
+    before = signal.getsignal(signal.SIGINT)
+    with PreemptionGuard() as g:
+        assert signal.getsignal(signal.SIGINT) == g._handler
+        signal.raise_signal(signal.SIGINT)   # absorbed, sets the flag
+        assert g.requested
+        # handlers already restored: a second signal acts immediately
+        assert signal.getsignal(signal.SIGINT) == before
+        with pytest.raises(KeyboardInterrupt):
+            signal.raise_signal(signal.SIGINT)
+    assert signal.getsignal(signal.SIGINT) == before
+
+
+def test_double_signal_force_saves_and_raises(tmp_path):
+    def step_fn(state, batch):
+        step = int(state["step"])
+        if step == 2:
+            signal.raise_signal(signal.SIGINT)   # drain request
+            signal.raise_signal(signal.SIGINT)   # exit NOW
+        return {"step": state["step"] + 1}, {}
+
+    ft = FTConfig(ckpt_dir=str(tmp_path), ckpt_every=100)
+    with pytest.raises(KeyboardInterrupt):
+        run_training(step_fn, {"step": jnp.asarray(0)}, lambda s: {},
+                     ft=ft, num_steps=10)
+    # last *completed* state (after step 1) was force-saved on the way out
+    assert latest_step(str(tmp_path)) == 2
+    # handlers fully restored after the context exits
+    assert signal.getsignal(signal.SIGINT) == signal.default_int_handler

@@ -1,0 +1,395 @@
+"""Fault model, detour routing, collective tree repair, faulted
+verification, and degradation-aware serving (DESIGN.md S15).
+
+The two load-bearing contracts:
+
+* **zero-fault degenerate equivalence** — an empty FaultModel takes the
+  exact clean code path: identical programs, identical latency + full
+  energy ledger on both engines, identical cluster metrics;
+* **seeded-mutation coverage** — each fault class of
+  :func:`repro.analysis.verify.verify_faulted` fires on exactly its
+  class of corruption.
+"""
+import dataclasses
+
+import pytest
+
+from repro.analysis.corpus import FAULT_MESH_N, faulted_collective_programs
+from repro.analysis.verify import verify_faulted
+from repro.core.noc.collective.cost import collective_cost
+from repro.core.noc.collective.engine import run_program
+from repro.core.noc.collective.schedule import plan_collective
+from repro.core.noc.faults import (EMPTY_FAULTS, FaultModel, UnroutableError,
+                                   detour_route,
+                                   path_is_updown, path_is_west_first,
+                                   remap_participants, remap_root,
+                                   repair_multicast_tree,
+                                   repair_reduction_tree, seeded_faults,
+                                   updown_keys)
+from repro.core.noc.router import NocConfig
+from repro.core.noc.topology import Mesh
+
+N = 6
+CFG = NocConfig(n=N)
+FULL = [(x, y) for x in range(N) for y in range(N)]
+FAULTS = seeded_faults(N, N, link_rate=0.08, router_rate=0.02,
+                       pe_rate=0.05, seed=11)
+
+
+# --------------------------------------------------------------------------- #
+# fault model
+# --------------------------------------------------------------------------- #
+def test_seeded_faults_deterministic():
+    a = seeded_faults(N, N, link_rate=0.1, router_rate=0.05, seed=7)
+    b = seeded_faults(N, N, link_rate=0.1, router_rate=0.05, seed=7)
+    c = seeded_faults(N, N, link_rate=0.1, router_rate=0.05, seed=8)
+    assert a == b and a.key() == b.key()
+    assert a != c
+    assert Mesh(N, N).seeded_faults(link_rate=0.1, router_rate=0.05,
+                                    seed=7) == a
+
+
+def test_empty_fault_model():
+    assert EMPTY_FAULTS.empty
+    assert seeded_faults(N, N).empty
+    assert not FAULTS.empty
+    assert EMPTY_FAULTS.link_ok((0, 0), (1, 0))
+    assert EMPTY_FAULTS.path_clear(FULL)
+
+
+def test_transient_at_window():
+    f = FaultModel(transient=((0, ((0, 0), (1, 0))), (2, ((1, 0), (2, 0)))))
+    assert not f.at_window(0).link_ok((0, 0), (1, 0))
+    assert f.at_window(0).link_ok((1, 0), (2, 0))
+    assert f.at_window(1).empty
+    assert not f.at_window(2).link_ok((1, 0), (2, 0))
+    # permanent faults persist across windows
+    g = FaultModel(links=frozenset({((0, 0), (0, 1))}),
+                   transient=((0, ((0, 0), (1, 0))),))
+    assert not g.at_window(5).link_ok((0, 0), (0, 1))
+    assert g.at_window(5).link_ok((0, 0), (1, 0))
+
+
+def test_router_failure_kills_its_paths_and_pe():
+    f = FaultModel(routers=frozenset({(2, 2)}))
+    assert not f.router_ok((2, 2))
+    assert not f.path_clear([(1, 2), (2, 2), (3, 2)])
+    assert not f.pe_ok((2, 2))          # PE unreachable through dead router
+
+
+# --------------------------------------------------------------------------- #
+# detour routing
+# --------------------------------------------------------------------------- #
+def test_detour_routes_avoid_faults_and_respect_rules():
+    for rule in ("west_first", "updown"):
+        for dst in [(5, 5), (0, 5), (3, 2)]:
+            try:
+                path = detour_route((0, 0), dst, FAULTS, N, N, rule=rule)
+            except UnroutableError:
+                continue
+            assert FAULTS.path_clear(path)
+            if rule == "west_first":
+                assert path_is_west_first(path)
+            else:
+                assert path_is_updown(path, FAULTS, N, N)
+
+
+def test_updown_routes_entire_healthy_component():
+    keys = updown_keys(FAULTS, N, N)
+    nodes = sorted(keys)
+    for s in nodes[:8]:
+        for d in nodes[-8:]:
+            path = detour_route(s, d, FAULTS, N, N, rule="updown")
+            assert path[0] == s and path[-1] == d
+            assert FAULTS.path_clear(path)
+    # degenerate: src == dst
+    assert detour_route(nodes[0], nodes[0], FAULTS, N, N,
+                        rule="updown") == (nodes[0],)
+
+
+def test_zero_fault_routing_is_pure_xy():
+    from repro.core.noc.topology import xy_route_tuple
+    assert detour_route((0, 0), (4, 3), EMPTY_FAULTS, N, N) == \
+        xy_route_tuple((0, 0), (4, 3))
+
+
+def test_route_to_failed_router_raises():
+    f = FaultModel(routers=frozenset({(3, 3)}))
+    with pytest.raises(UnroutableError):
+        detour_route((0, 0), (3, 3), f, N, N)
+
+
+# --------------------------------------------------------------------------- #
+# tree repair + remap
+# --------------------------------------------------------------------------- #
+def test_repair_trees_span_healthy_participants():
+    healthy, moved = remap_participants(FULL, FAULTS, N, N)
+    root = remap_root((0, 0), healthy, FAULTS)
+    for builder in (repair_reduction_tree, repair_multicast_tree):
+        for rule in ("west_first", "updown"):
+            try:
+                tree = builder(root, healthy, FAULTS, N, N, rule=rule)
+            except UnroutableError:
+                assert rule == "west_first"    # updown must always work
+                continue
+            assert set(healthy) <= set(tree.nodes)
+            assert not (set(tree.nodes) & set(FAULTS.routers))
+
+
+def test_remap_moves_dead_and_stranded_pes_to_nearest_healthy():
+    healthy, moved = remap_participants(FULL, FAULTS, N, N)
+    keys = updown_keys(FAULTS, N, N)
+    for p in FULL:
+        usable = FAULTS.pe_ok(p) and p in keys
+        assert (p in healthy) == usable
+        if not usable:
+            assert moved[p] in healthy
+    assert not moved or all(m != p for p, m in moved.items())
+
+
+def test_remap_all_dead_raises():
+    f = FaultModel(pes=frozenset(FULL))
+    with pytest.raises(UnroutableError):
+        remap_participants(FULL, f, N, N)
+
+
+# --------------------------------------------------------------------------- #
+# zero-fault degenerate equivalence
+# --------------------------------------------------------------------------- #
+def test_empty_faults_bit_identical_programs_and_costs():
+    for op, algorithm in (("reduce", "reduce_bcast"),
+                          ("broadcast", "reduce_bcast"),
+                          ("allreduce", "rs_ag")):
+        for semantics in ("ina", "eject_inject"):
+            clean = plan_collective(op, FULL, 512.0, CFG,
+                                    algorithm=algorithm,
+                                    semantics=semantics)
+            empty = plan_collective(op, FULL, 512.0, CFG,
+                                    algorithm=algorithm,
+                                    semantics=semantics,
+                                    faults=EMPTY_FAULTS)
+            assert clean == empty
+            for engine in ("heap", "compiled"):
+                a = run_program(list(clean), CFG, engine=engine)
+                b = run_program(list(empty), CFG, engine=engine)
+                assert a.latency_cycles == b.latency_cycles
+                assert a.ledger == b.ledger
+            ca = collective_cost(op, 512.0, CFG, algorithm=algorithm,
+                                 semantics=semantics)
+            cb = collective_cost(op, 512.0, CFG, algorithm=algorithm,
+                                 semantics=semantics, faults=EMPTY_FAULTS)
+            assert ca == cb
+
+
+def test_faulted_plan_deterministic_and_clear():
+    a = plan_collective("allreduce", FULL, 512.0, CFG, faults=FAULTS)
+    b = plan_collective("allreduce", FULL, 512.0, CFG, faults=FAULTS)
+    assert a == b
+    for o in a:
+        if o.flits and o.src != o.dst:
+            assert o.path is not None
+            assert FAULTS.path_clear(o.path)
+
+
+def test_faulted_cost_reports_same_engine_results():
+    c = collective_cost("allreduce", 512.0, CFG, faults=FAULTS)
+    prog = plan_collective("allreduce", FULL, 512.0, CFG, faults=FAULTS)
+    for engine in ("heap", "compiled"):
+        r = run_program(list(prog), CFG, engine=engine)
+        assert r.latency_cycles == c.latency_cycles
+        assert r.ledger.network_energy_pj(CFG) == pytest.approx(c.energy_pj)
+
+
+# --------------------------------------------------------------------------- #
+# verifier fault classes: each fires on exactly its corruption
+# --------------------------------------------------------------------------- #
+def _first_routed(prog):
+    for i, o in enumerate(prog):
+        if o.flits and o.path is not None and len(o.path) > 2:
+            return i, o
+    raise AssertionError("no routed op in program")
+
+
+def _classes(findings):
+    return {f.check for f in findings}
+
+
+def test_faulted_corpus_clean():
+    for case, cfg, faults, prog in faulted_collective_programs(quick=True):
+        assert verify_faulted(
+            prog, faults, cfg, op=case["op"],
+            participants=case["participants"],
+            algorithm=case["algorithm"],
+            semantics=case["semantics"]) == []
+
+
+def test_mutation_route_through_failed_link():
+    prog = list(plan_collective("reduce", FULL, 512.0, CFG, faults=FAULTS))
+    i, o = _first_routed(prog)
+    # send a packet straight across a failed link
+    a, b = sorted(FAULTS.links)[0]
+    prog[i] = dataclasses.replace(o, src=a, dst=b, path=(a, b))
+    found = _classes(verify_faulted(prog, FAULTS, CFG))
+    assert "fault-route" in found
+
+
+def test_mutation_illegal_turn():
+    prog = list(plan_collective("reduce", FULL, 512.0, CFG, faults=FAULTS))
+    i, o = _first_routed(prog)
+    x, y = o.path[0]
+    # an east-then-west U-turn is illegal under both detour rules
+    detour = (o.path[0], (x + 1, y), o.path[0], *o.path[1:]) \
+        if x + 1 < N else (o.path[0], (x - 1, y), o.path[0], *o.path[1:])
+    prog[i] = dataclasses.replace(o, path=detour)
+    found = _classes(verify_faulted(prog, FAULTS, CFG))
+    assert "fault-turn" in found
+    assert "fault-remap" not in found
+
+
+def test_mutation_dead_pe_contribution():
+    prog = list(plan_collective("reduce", FULL, 512.0, CFG, faults=FAULTS))
+    dead = sorted(FAULTS.pes)[0]
+    i, o = _first_routed(prog)
+    prog[i] = dataclasses.replace(
+        o, contribs=frozenset(o.contribs) | {dead})
+    found = _classes(verify_faulted(prog, FAULTS, CFG, op="reduce",
+                                    participants=FULL))
+    assert "fault-remap" in found
+
+
+def test_transient_faults_rejected_by_verifier():
+    f = FaultModel(transient=((0, ((0, 0), (1, 0))),))
+    prog = list(plan_collective("reduce", FULL, 512.0, CFG))
+    found = verify_faulted(prog, f, CFG)
+    assert any(x.check == "fault-route" and "transient" in x.message
+               for x in found)
+
+
+# --------------------------------------------------------------------------- #
+# whole-program rule fallback
+# --------------------------------------------------------------------------- #
+def test_planner_falls_back_to_updown_when_west_first_cannot():
+    # seed 0 at 12% link faults: the greedy west-first tree repair raises
+    # UnroutableError, so the planner must replan the whole program under
+    # the up*/down* rule — and the result still verifies clean
+    f = seeded_faults(N, N, link_rate=0.12, seed=0)
+    healthy, _ = remap_participants(FULL, f, N, N)
+    root = remap_root((0, 0), healthy, f)
+    with pytest.raises(UnroutableError):
+        repair_reduction_tree(root, healthy, f, N, N, rule="west_first")
+    prog = plan_collective("reduce", FULL, 512.0, CFG, faults=f)
+    assert any(o.path is not None and path_is_updown(o.path, f, N, N)
+               for o in prog if o.flits and o.path and len(o.path) > 2)
+    assert verify_faulted(prog, f, CFG, op="reduce",
+                          participants=FULL) == []
+
+
+# --------------------------------------------------------------------------- #
+# degradation-aware serving
+# --------------------------------------------------------------------------- #
+def test_cluster_zero_trace_equivalence():
+    from repro.serve.cluster import ClusterSimulator
+    from repro.serve.costs import DegradedCostModel, SyntheticCostModel
+    from repro.serve.traffic import make_workload
+
+    reqs = make_workload(40, 1.0, "uniform:32:64", "uniform:8:16", seed=0)
+    base = ClusterSimulator(2, slots=4, block_size=16, max_seq=256,
+                            prefill_chunk=32,
+                            cost=SyntheticCostModel()).run(reqs)
+    degr = ClusterSimulator(2, slots=4, block_size=16, max_seq=256,
+                            prefill_chunk=32,
+                            cost=DegradedCostModel(SyntheticCostModel(),
+                                                   1.0),
+                            failures=[]).run(reqs)
+    assert base == degr
+    assert degr["goodput"] == 1.0 and degr["retries"] == 0
+    assert degr["failed_requests"] == 0 and degr["downtime_events"] == 0
+
+
+def test_cluster_degradation_deterministic_and_accounted():
+    from repro.serve.cluster import ClusterSimulator, replica_failure_trace
+    from repro.serve.costs import SyntheticCostModel
+    from repro.serve.traffic import make_workload
+
+    reqs = make_workload(60, 1.0, "uniform:32:64", "uniform:8:16", seed=0)
+    horizon = max(r.arrival for r in reqs)
+    trace = replica_failure_trace(2, horizon, mtbf_s=horizon * 0.2,
+                                  mttr_s=horizon * 0.05, seed=3)
+    assert trace == replica_failure_trace(2, horizon, mtbf_s=horizon * 0.2,
+                                          mttr_s=horizon * 0.05, seed=3)
+    assert trace and all(k in ("down", "up") for _, _, k in trace)
+
+    def run():
+        return ClusterSimulator(2, slots=4, block_size=16, max_seq=256,
+                                prefill_chunk=32,
+                                cost=SyntheticCostModel(),
+                                failures=trace).run(reqs)
+
+    a, b = run(), run()
+    assert a == b
+    assert a["downtime_events"] == sum(1 for _, _, k in trace
+                                       if k == "down")
+    # conservation: everything submitted either completed or failed out
+    done = round(a["goodput"] * len(reqs))
+    assert done + a["failed_requests"] == len(reqs)
+
+
+def test_degraded_p99_never_beats_clean():
+    from repro.serve.cluster import ClusterSimulator, replica_failure_trace
+    from repro.serve.costs import DegradedCostModel, SyntheticCostModel
+    from repro.serve.traffic import make_workload
+
+    reqs = make_workload(60, 2.0, "uniform:32:64", "uniform:8:16", seed=0)
+    horizon = max(r.arrival for r in reqs)
+    clean = ClusterSimulator(2, slots=4, block_size=16, max_seq=256,
+                             prefill_chunk=32,
+                             cost=SyntheticCostModel()).run(reqs)
+    trace = replica_failure_trace(2, horizon, mtbf_s=horizon * 0.3,
+                                  mttr_s=horizon * 0.1, seed=1)
+    degr = ClusterSimulator(2, slots=4, block_size=16, max_seq=256,
+                            prefill_chunk=32,
+                            cost=DegradedCostModel(SyntheticCostModel(),
+                                                   1.3),
+                            failures=trace).run(reqs)
+    assert degr["e2e_s"]["p99"] >= clean["e2e_s"]["p99"]
+    assert degr["goodput"] <= 1.0
+
+
+def test_fault_slowdown_scalar():
+    from repro.serve.costs import (DegradedCostModel, SyntheticCostModel,
+                                   fault_slowdown)
+    assert fault_slowdown(None) == 1.0
+    assert fault_slowdown(EMPTY_FAULTS) == 1.0
+    s = fault_slowdown(FAULTS, CFG)
+    assert s >= 1.0
+    base = SyntheticCostModel()
+    d = DegradedCostModel(base, 2.0)
+    assert d.prefill_chunk_seconds() == 2.0 * base.prefill_chunk_seconds()
+    assert d.decode_iter_seconds(3) == 2.0 * base.decode_iter_seconds(3)
+
+
+# --------------------------------------------------------------------------- #
+# hierarchy
+# --------------------------------------------------------------------------- #
+def test_hier_failed_chip_excluded_end_to_end():
+    from repro.core.noc.hierarchy import HierarchicalMesh, \
+        plan_hier_collective
+
+    hmesh = HierarchicalMesh(chip_w=FAULT_MESH_N, chip_h=FAULT_MESH_N,
+                             chips_x=2, chips_y=2)
+    sched = plan_hier_collective("allreduce", hmesh, 4096.0,
+                                 failed_chips=(3,))
+    chips = {lane.chip for _lvl, lane in sched.all_lanes()
+             if lane.scope == "chip"}
+    assert chips and 3 not in chips
+
+
+def test_hier_zero_faults_identical():
+    from repro.core.noc.hierarchy import HierarchicalMesh, \
+        plan_hier_collective
+
+    hmesh = HierarchicalMesh(chips_x=2, chips_y=1)
+    clean = plan_hier_collective("allreduce", hmesh, 4096.0)
+    empty = plan_hier_collective("allreduce", hmesh, 4096.0,
+                                 faults=EMPTY_FAULTS, failed_chips=())
+    assert clean == empty
