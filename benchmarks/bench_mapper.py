@@ -8,7 +8,10 @@ three execution modes and cross-checks that every ratio is bit-identical:
 
 * ``reference``  — the legacy serial path (heap engine, no compiled
   windows, no layer memo, cold cache): the PR-3 execution model;
-* ``cold``       — compiled windows + layer memo, empty caches;
+* ``cold_compiled`` — PR-4 execution model: compiled windows + layer
+  memo, vectorized kernels off, empty caches;
+* ``cold``       — vectorized window kernels + batched prefetch + memos,
+  empty caches;
 * ``warm``       — same, caches warm (what a persistent-store run sees).
 
 Use ``python -m repro.experiments --section mapper`` for the full Pareto
@@ -36,6 +39,7 @@ def run_full_perf(jobs: int = 1) -> tuple[list[str], dict]:
     from repro.core.noc.compiled import compiled_disabled
     from repro.core.noc.simcache import fresh_sim_cache
     from repro.core.noc.traffic import clear_compiled_caches
+    from repro.core.noc.vectorized import vectorized_disabled
     from repro.experiments.sweeps import run_mapper
 
     sweep = dataclasses.replace(DEFAULT_SWEEP, jobs=jobs)
@@ -46,6 +50,11 @@ def run_full_perf(jobs: int = 1) -> tuple[list[str], dict]:
         t0 = time.time()
         ref_out = run_mapper(serial)
         reference_s = time.time() - t0
+    with fresh_sim_cache(), vectorized_disabled():
+        clear_compiled_caches()
+        t0 = time.time()
+        cold_compiled_out = run_mapper(sweep)
+        cold_compiled_s = time.time() - t0
     with fresh_sim_cache():
         clear_compiled_caches()
         t0 = time.time()
@@ -65,34 +74,39 @@ def run_full_perf(jobs: int = 1) -> tuple[list[str], dict]:
         return [(r["workload"], r["latency_x"], r["energy_x"], r["hardware"])
                 for r in out["rows"]]
 
-    identical = sig(ref_out) == sig(cold_out) == sig(warm_out) \
-        == sig(warm_serial_out)
+    identical = sig(ref_out) == sig(cold_compiled_out) == sig(cold_out) \
+        == sig(warm_out) == sig(warm_serial_out)
     if not identical:                            # must never ship silently
         raise AssertionError(
             "mapper ratios differ across execution modes: "
-            f"ref={sig(ref_out)} cold={sig(cold_out)} warm={sig(warm_out)}")
+            f"ref={sig(ref_out)} compiled={sig(cold_compiled_out)} "
+            f"cold={sig(cold_out)} warm={sig(warm_out)}")
     perf = {
         "space": "full",
         "jobs": jobs,
         "workloads": [r["workload"] for r in ref_out["rows"]],
         "reference_serial_s": reference_s,
+        "optimized_cold_compiled_s": cold_compiled_s,
         "optimized_cold_s": cold_s,
         "optimized_warm_s": warm_s,
         "optimized_warm_serial_s": warm_serial_s,
         "speedup_cold": reference_s / cold_s,
         "speedup_warm": reference_s / warm_s,
         "speedup_warm_serial": reference_s / warm_serial_s,
+        "speedup_vs_compiled_cold": cold_compiled_s / cold_s,
         "bit_identical": identical,
         "pinned_ratios": {r["workload"]: r["latency_x"]
                           for r in ref_out["rows"]},
     }
     lines = [
         f"mapper_full_reference,{reference_s * 1e6:.0f},engine=heap;jobs=1;cache=cold",
-        f"mapper_full_cold,{cold_s * 1e6:.0f},engine=compiled;jobs={jobs};cache=cold",
-        f"mapper_full_warm,{warm_s * 1e6:.0f},engine=compiled;jobs={jobs};cache=warm",
-        f"mapper_full_warm_serial,{warm_serial_s * 1e6:.0f},engine=compiled;jobs=1;cache=warm",
+        f"mapper_full_cold_compiled,{cold_compiled_s * 1e6:.0f},engine=compiled;jobs={jobs};cache=cold",
+        f"mapper_full_cold,{cold_s * 1e6:.0f},engine=vectorized;jobs={jobs};cache=cold",
+        f"mapper_full_warm,{warm_s * 1e6:.0f},engine=vectorized;jobs={jobs};cache=warm",
+        f"mapper_full_warm_serial,{warm_serial_s * 1e6:.0f},engine=vectorized;jobs=1;cache=warm",
         (f"mapper_full_speedup,0,cold={perf['speedup_cold']:.2f}x;"
          f"warm={perf['speedup_warm_serial']:.2f}x;"
+         f"vs_compiled_cold={perf['speedup_vs_compiled_cold']:.2f}x;"
          f"bit_identical={identical}"),
     ]
     return lines, perf

@@ -5,11 +5,17 @@
 #
 # Every run also writes a machine-readable perf-trajectory snapshot
 # ``BENCH_<n>.json`` at the repo root (per-section wall time + CSV rows,
-# window-cache stats, jobs, git rev) — the trajectory the roadmap's "fast
-# as the hardware allows" goal is tracked against.  ``--jobs`` fans the
-# simulation sections over a process pool; ``--quick`` selects the CI smoke
-# shapes; the persistent window cache warms repeated runs (``--cache-dir``
-# / ``--no-persist``, see EXPERIMENTS.md).
+# window-cache + vector-kernel stats, jobs, git rev) — the trajectory the
+# roadmap's "fast as the hardware allows" goal is tracked against.
+# ``--jobs`` fans the simulation sections over a process pool; ``--quick``
+# selects the CI smoke shapes; the persistent window cache warms repeated
+# runs (``--cache-dir`` / ``--no-persist``, see EXPERIMENTS.md).
+#
+# The trajectory is numbered by the PR that recorded each point, so it has
+# gaps: there is no BENCH_6.json because PR 6 (the serving engine) landed
+# no trajectory-grade full-space run.  Numbers are PR labels, not a dense
+# sequence — ``_default_bench_path`` therefore always proposes a *fresh*
+# number and never reuses an existing one.
 import argparse
 import json
 import os
@@ -147,27 +153,31 @@ def _git_rev() -> str:
         return "?"
 
 
-def _default_bench_path(args, sections) -> str:
+def _default_bench_path(args, sections, root: str = None) -> str:
     """Where a snapshot goes when ``--bench-out`` is not given.
 
     The repo-root ``BENCH_<n>.json`` trajectory holds one
     *trajectory-grade* data point per PR (full shapes, mapper_full perf
-    probe): only such runs refresh the highest-numbered snapshot in place
-    (never minting BENCH_5/6/7 from repeated local runs; the first-ever
-    run creates ``BENCH_4.json``, the PR that introduced it, and a new PR
-    starts its point explicitly via ``--bench-out BENCH_<n+1>.json``).
-    Quick or partial runs must not clobber that record — they land in
-    ``results/bench_snapshot.json`` instead.
+    probe).  The default is always the **next free** number
+    (``max(taken) + 1``): the trajectory is append-only, and because its
+    numbers are PR labels with gaps (no BENCH_6.json — see the file
+    docstring) "one past the highest" is the only default that can never
+    land on an existing file and silently overwrite a recorded point.  A
+    PR that wants a specific label states it with ``--bench-out
+    BENCH_<n>.json``.  Quick or partial runs must not enter the record at
+    all — they land in ``results/bench_snapshot.json`` instead.
     """
+    root = root or _ROOT
     if args.quick or "mapper_full" not in sections:
-        return os.path.join(_ROOT, "results", "bench_snapshot.json")
-    taken = [int(m.group(1)) for f in os.listdir(_ROOT)
+        return os.path.join(root, "results", "bench_snapshot.json")
+    taken = [int(m.group(1)) for f in os.listdir(root)
              if (m := re.fullmatch(r"BENCH_(\d+)\.json", f))]
-    return os.path.join(_ROOT, f"BENCH_{max(taken) if taken else 4}.json")
+    return os.path.join(root, f"BENCH_{max(taken) + 1 if taken else 4}.json")
 
 
 def _write_snapshot(path, args, sections, section_stats, failed) -> None:
     from repro.core.noc.simcache import SIM_CACHE
+    from repro.core.noc.vectorized import vector_stats
     snap = {
         "schema": 1,
         "git_rev": _git_rev(),
@@ -178,6 +188,7 @@ def _write_snapshot(path, args, sections, section_stats, failed) -> None:
         "sections": section_stats,
         "failed": failed,
         "cache": SIM_CACHE.stats(),
+        "vector": vector_stats(),
         "perf": _PERF,
     }
     with open(path, "w") as fh:

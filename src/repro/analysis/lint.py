@@ -51,7 +51,9 @@ from typing import Callable, Optional, Sequence
 
 from .findings import Finding
 
-#: Modules bound to the determinism contract: simulation/cost, planning,
+#: Modules bound to the determinism contract: simulation/cost (the heap,
+#: compiled, and vectorized engines — ``core/noc/`` is a prefix, so
+#: ``core/noc/vectorized.py`` is in scope like the rest), planning,
 #: serving, mapper search, the fault-tolerant runtime.  experiments/,
 #: launch/, exec/ stay out — they report wall time and write logs by
 #: design (duration reporting routes through ``exec.timing.Stopwatch``).

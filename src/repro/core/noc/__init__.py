@@ -16,9 +16,13 @@ from .topology import Mesh, route, xy_route, yx_route
 from .simulator import NocSim
 from .traffic import (CompiledWindow, LayerResult, layer_plan,
                       simulate_layer, simulate_network)
+from .vectorized import (VectorProgram, lower_program, run_vectorized,
+                         vector_stats, vectorized_disabled)
 
 __all__ = ["NocConfig", "EnergyLedger", "Mesh", "route", "xy_route",
            "yx_route", "NocSim", "LayerResult", "layer_plan",
            "simulate_layer", "simulate_network", "SIM_CACHE", "SimCache",
            "sim_cache_disabled", "fresh_sim_cache", "CompiledProgram",
-           "CompiledWindow", "compile_program", "compiled_disabled"]
+           "CompiledWindow", "compile_program", "compiled_disabled",
+           "VectorProgram", "lower_program", "run_vectorized",
+           "vector_stats", "vectorized_disabled"]

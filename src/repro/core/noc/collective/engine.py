@@ -11,12 +11,15 @@ traffic generator cycle-for-cycle.
 Virtual ops (``flits == 0``, no inject/eject) are synchronisation points:
 they complete at their issue time without touching the network.
 
-Two executors share these semantics (DESIGN.md S10): the closure-based
-heap engine below (the ground truth, fully general), and the compiled
-flat-array replay of :mod:`repro.core.noc.compiled`.  ``run_program``
-dispatches to the compiled executor when the program is encodable and no
-external simulator was supplied; results are bit-identical (latency and
-ledger), enforced by ``tests/test_perf_layer.py``.
+Three executors share these semantics (DESIGN.md S10/S16): the
+closure-based heap engine below (the ground truth, fully general), the
+compiled flat-array replay of :mod:`repro.core.noc.compiled`, and the
+vectorized wavefront kernel of :mod:`repro.core.noc.vectorized`
+(contention-free DAG programs only).  ``run_program`` dispatches
+vectorized -> compiled -> heap when the program is encodable and no
+external simulator was supplied; results are bit-identical (latency,
+done times, deliveries, and the full ledger), enforced by
+``tests/test_perf_layer.py`` and ``tests/test_vectorized.py``.
 """
 from __future__ import annotations
 
@@ -27,6 +30,8 @@ from ..compiled import (UncompilableProgram, compile_program,
                         compiled_enabled)
 from ..router import EnergyLedger, NocConfig
 from ..simulator import NocSim
+from ..vectorized import (UnvectorizableProgram, run_vectorized,
+                          vectorized_enabled)
 from .schedule import PacketOp
 
 
@@ -51,18 +56,27 @@ def run_program(prog: Sequence[PacketOp], cfg: Optional[NocConfig] = None,
     """Execute ``prog`` on ``sim`` (or a fresh simulator) and return the
     makespan, per-op completion times, and the energy ledger.
 
-    ``engine`` selects the executor: ``"auto"`` replays through the
-    compiled flat-array path when possible (bit-identical, no per-op
-    closures), ``"heap"`` forces the ground-truth engine below.  A caller
-    supplied ``sim`` always uses the heap engine (the caller owns the
-    simulator's ledger and resource state).  ``verify=True`` runs the
-    static checks (``repro.analysis``: DAG/route/CDG) first and raises
-    ``VerificationError`` instead of simulating a broken program.
+    ``engine`` selects the executor: ``"auto"`` tries the vectorized
+    wavefront kernel, then the compiled flat-array path (both
+    bit-identical, no per-op closures); ``"heap"`` forces the
+    ground-truth engine below.  A caller supplied ``sim`` always uses the
+    heap engine (the caller owns the simulator's ledger and resource
+    state).  ``verify=True`` runs the static checks (``repro.analysis``:
+    DAG/route/CDG) first and raises ``VerificationError`` instead of
+    simulating a broken program.
     """
     if verify:
         from repro.analysis.verify import check_program
         check_program(prog, cfg)
     if sim is None and engine == "auto" and compiled_enabled():
+        if vectorized_enabled():
+            try:
+                latency, ledger, done, delivered = run_vectorized(
+                    prog, cfg if cfg is not None else NocConfig())
+                return ProgramResult(latency_cycles=latency, ledger=ledger,
+                                     done=done, delivered=delivered)
+            except UnvectorizableProgram:
+                pass                    # attributed in VECTOR_STATS
         try:
             cp = compile_program(prog, cfg if cfg is not None else NocConfig())
         except UncompilableProgram:

@@ -41,6 +41,7 @@ from .compiled import (CompiledProgram, UncompilableProgram, compile_program,
 from .router import EnergyLedger, NocConfig
 from .simcache import SIM_CACHE
 from .simulator import NocSim
+from .vectorized import vectorized_enabled, window_result
 
 MODES = ("ws_ina", "ws_noina", "os_gather")
 
@@ -212,13 +213,14 @@ def clear_compiled_caches() -> None:
     keys — only to measure genuinely cold runs (``bench_mapper``) or to
     bound memory.
     """
-    from . import simulator, topology
+    from . import simulator, topology, vectorized
 
     _WINDOW_PROGRAMS.clear()
     _ROUND_PROGRAMS.clear()
     _plan.cache_clear()
     simulator.clear_link_caches()
     topology.clear_route_caches()
+    vectorized.clear_vector_caches()
 
 
 def _compiled_window(key: tuple, cfg: NocConfig, mode: str, window: int,
@@ -275,6 +277,13 @@ def _sim_rounds_window(plan: _Plan, cfg: NocConfig, mode: str, window: int,
     if hit is not None:
         return hit
     if compiled_enabled():
+        if vectorized_enabled():
+            vec = window_result(cfg, mode, window, plan.g, plan.p,
+                                plan.gather_flits, plan.unicast_flits, e_pes)
+            if vec is not None:
+                latency, ledger = vec
+                SIM_CACHE.put(key, latency, ledger)
+                return latency, ledger
         cw = _compiled_window(key, cfg, mode, window, plan, e_pes)
         if cw is not None:
             latency, ledger = cw.replay()

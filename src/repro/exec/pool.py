@@ -19,10 +19,12 @@ Cache movement is two-way:
   order cannot matter) so later sections and the persistent store see the
   union.
 
-Fallbacks: ``jobs <= 1``, a single item, or a platform without the
-``fork`` start method (Windows) all run serially in-process.  Forked pool
-workers exit via ``os._exit`` and therefore never trigger the persistent
-cache's atexit merge — only the parent writes to disk.
+Fallbacks: ``jobs <= 1``, a single item, a platform without the ``fork``
+start method (Windows), or a single schedulable CPU all run serially
+in-process — the work is CPU-bound and deterministic, so forking on one
+core can only add overhead, never overlap.  Forked pool workers exit via
+``os._exit`` and therefore never trigger the persistent cache's atexit
+merge — only the parent writes to disk.
 """
 from __future__ import annotations
 
@@ -54,6 +56,14 @@ def default_jobs(requested: Optional[int] = None) -> int:
 #: importable module-level callables and start cold) or ``serial`` to
 #: disable fan-out entirely.
 POOL_START_ENV = "REPRO_POOL_START"
+
+
+def _effective_cpus() -> int:
+    """CPUs this process may actually run on (cgroup/affinity aware)."""
+    try:
+        return len(os.sched_getaffinity(0))
+    except AttributeError:                          # pragma: no cover
+        return os.cpu_count() or 1
 
 
 def _fork_context():
@@ -90,7 +100,8 @@ def parallel_map(fn: Callable[[T], R], items: Iterable[T],
     """
     items = list(items)
     ctx = _fork_context()
-    if jobs <= 1 or len(items) <= 1 or ctx is None or _IN_WORKER:
+    if jobs <= 1 or len(items) <= 1 or ctx is None or _IN_WORKER \
+            or _effective_cpus() <= 1:
         return [fn(it) for it in items]
     with ctx.Pool(min(jobs, len(items))) as pool:
         out = pool.map(_run_task, [(fn, it) for it in items])

@@ -52,6 +52,13 @@ def main(argv: list[str] | None = None) -> int:
                     metavar="C1,C2,..",
                     help="mapper section: package-replication axis, e.g. "
                          "1,2,4 (default 1 = flat mesh; DESIGN.md S14)")
+    ap.add_argument("--engine", default="auto",
+                    choices=("auto", "vectorized", "compiled", "heap"),
+                    help="simulation backend: auto/vectorized = array "
+                         "kernels with compiled fallback (default), "
+                         "compiled = PR-4 flat replay only, heap = "
+                         "ground-truth event loop (all bit-identical; "
+                         "DESIGN.md S16)")
     ap.add_argument("--no-cache", action="store_true",
                     help="bypass the plan-keyed window cache (ground truth)")
     ap.add_argument("--jobs", type=int, default=None, metavar="N",
@@ -116,7 +123,18 @@ def main(argv: list[str] | None = None) -> int:
     unknown = [s for s in sections if s not in SECTIONS]
     if unknown:
         ap.error(f"unknown sections {unknown}; pick from {SECTIONS}")
-    results = run_all(sweep, out_dir=args.out, sections=sections)
+    from contextlib import ExitStack
+
+    from repro.core.noc.compiled import compiled_disabled
+    from repro.core.noc.vectorized import vector_stats, vectorized_disabled
+    with ExitStack() as stack:
+        # All three backends are bit-identical; the flag exists to measure
+        # them against each other and to pin down a backend when debugging.
+        if args.engine == "compiled":
+            stack.enter_context(vectorized_disabled())
+        elif args.engine == "heap":
+            stack.enter_context(compiled_disabled())
+        results = run_all(sweep, out_dir=args.out, sections=sections)
     meta = results["_meta"]
     for section in sections:
         fig = results[section]
@@ -138,6 +156,14 @@ def main(argv: list[str] | None = None) -> int:
           f"{cache['hits']} hits / {cache['misses']} misses "
           f"({cache['hit_rate']:.1%} hit rate)"
           f"{persisted}")
+    v = vector_stats()
+    state = "on" if v["enabled"] else "off"
+    print(f"vectorized backend [{state}]: "
+          f"{v['windows_closed_form']} closed-form windows "
+          f"({v['windows_batched']} batched), "
+          f"{v['columns_replayed']} column replays, "
+          f"{v['programs_lowered']} DAG programs, "
+          f"{v['fallbacks']} fallbacks")
     return 0
 
 

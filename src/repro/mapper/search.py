@@ -28,6 +28,7 @@ from typing import Optional, Sequence
 from repro.core.noc import SIM_CACHE, NocConfig
 from repro.core.noc.compiled import compiled_enabled
 from repro.core.noc.traffic import LayerResult, simulate_layer
+from repro.core.noc.vectorized import prefetch_windows, vectorized_enabled
 from repro.core.ops import LayerShape
 from repro.exec import parallel_map
 
@@ -67,12 +68,52 @@ class SearchOutcome:
 # --------------------------------------------------------------------------- #
 _EVAL_MEMO: dict = {"gen": -1, "store": {}}
 
+#: Ranked keep-list memo, same lifecycle: the candidate enumeration +
+#: analytic ranking of one (layer shape, hardware, space) cell is pure and
+#: repeats across identically-shaped layers (ResNet bottlenecks) and warm
+#: re-searches, and with the vectorized window kernels it — not the
+#: simulator — is the scoring loop's dominant cost.
+_RANK_MEMO: dict = {"gen": -1, "store": {}}
+
+
+def _memo_store(memo: dict) -> dict:
+    if memo["gen"] != SIM_CACHE.generation:
+        memo["gen"] = SIM_CACHE.generation
+        memo["store"] = {}
+    return memo["store"]
+
 
 def _eval_store() -> dict:
-    if _EVAL_MEMO["gen"] != SIM_CACHE.generation:
-        _EVAL_MEMO["gen"] = SIM_CACHE.generation
-        _EVAL_MEMO["store"] = {}
-    return _EVAL_MEMO["store"]
+    return _memo_store(_EVAL_MEMO)
+
+
+def _rank_store() -> dict:
+    return _memo_store(_RANK_MEMO)
+
+
+def memo_sizes() -> tuple[int, int]:
+    """(eval, rank) memo lengths — pair with :func:`memo_export`."""
+    return len(_eval_store()), len(_rank_store())
+
+
+def memo_export(sizes: tuple[int, int]) -> tuple[dict, dict]:
+    """Entries appended since ``sizes`` (insertion-ordered tails).
+
+    Lets a pool worker ship the layer/ranking memo growth of a whole
+    search back to the parent (:func:`repro.experiments.sweeps.run_mapper`
+    fans out at workload grain), mirroring what ``_score_hardware``'s
+    delta does per hardware point.
+    """
+    ev, rk = _eval_store(), _rank_store()
+    return ({k: ev[k] for k in islice(iter(ev), sizes[0], None)},
+            {k: rk[k] for k in islice(iter(rk), sizes[1], None)})
+
+
+def memo_merge(deltas: tuple[dict, dict]) -> None:
+    """Merge :func:`memo_export` deltas (pure values; order-free)."""
+    ev, rk = deltas
+    _eval_store().update(ev)
+    _rank_store().update(rk)
 
 
 def _eval_key(layer: LayerShape, mapping: Mapping, base_cfg: NocConfig,
@@ -112,11 +153,15 @@ def _evaluate_multichip(layer: LayerShape, mapping: Mapping,
         stream_energy_pj=r.stream_energy_pj * c)
 
 
-def evaluate_mapping(layer: LayerShape, mapping: Mapping,
-                     base_cfg: NocConfig = NocConfig(),
-                     sim_rounds: int = 16,
-                     package: str = "mesh") -> LayerResult:
-    """Exact (event-driven, cache-backed) cost of one mapping."""
+def _evaluate_cached(layer: LayerShape, mapping: Mapping,
+                     base_cfg: NocConfig, sim_rounds: int,
+                     package: str) -> LayerResult:
+    """Memo-backed cost, possibly named after an identically-shaped twin.
+
+    Internal fast path: callers that never read ``result.name``
+    (``_score_hardware``'s choose/assign loop) skip the per-call re-stamp
+    copy.  The returned object is shared with the memo — do not mutate.
+    """
     if mapping.chips > 1:
         return _evaluate_multichip(layer, mapping, base_cfg, sim_rounds,
                                    package)
@@ -132,6 +177,17 @@ def evaluate_mapping(layer: LayerShape, mapping: Mapping,
                              mapping.e_pes, sim_rounds,
                              q_bits=mapping.q_bits, groups=mapping.groups)
         store[key] = hit
+    return hit
+
+
+def evaluate_mapping(layer: LayerShape, mapping: Mapping,
+                     base_cfg: NocConfig = NocConfig(),
+                     sim_rounds: int = 16,
+                     package: str = "mesh") -> LayerResult:
+    """Exact (event-driven, cache-backed) cost of one mapping."""
+    hit = _evaluate_cached(layer, mapping, base_cfg, sim_rounds, package)
+    if hit.name == layer.name:
+        return hit
     # Hand out a copy re-stamped with the caller's layer identity: the memo
     # collapses identically-shaped layers, but results name their layer.
     return dataclasses.replace(hit, name=layer.name)
@@ -166,6 +222,67 @@ def _pareto(schedules: list[NetworkSchedule]) -> list[NetworkSchedule]:
     return front
 
 
+def _window_keys(layer: LayerShape, mapping: Mapping, base_cfg: NocConfig,
+                 sim_rounds: int) -> tuple:
+    """SIM_CACHE window keys that scoring ``mapping`` will ask for.
+
+    Mirrors :func:`evaluate_mapping` → ``simulate_layer`` → ``_accum_phase``
+    window selection exactly (big window + optional half window; multichip
+    mappings score their per-chip shard with ``chips=1``), so a batched
+    prefetch over these keys leaves the scalar scoring path on warm,
+    bit-identical cache hits.
+    """
+    from repro.core.noc.traffic import layer_plan
+    if mapping.chips > 1:
+        layer = shard_layer(layer, mapping.chips)
+        mapping = dataclasses.replace(mapping, chips=1)
+    cfg = mapping.cfg(base_cfg)
+    plan = layer_plan(layer, cfg, mapping.e_pes, mapping.mode,
+                      mapping.q_bits, mapping.groups)
+    if plan.rounds <= 0:
+        return ()
+    w_big = min(plan.rounds, max(1, sim_rounds))
+    keys = [(cfg, mapping.mode, w_big, plan.g, plan.p, plan.gather_flits,
+             plan.unicast_flits, mapping.e_pes)]
+    if plan.rounds > w_big:
+        w_small = max(1, w_big // 2)
+        if w_small != w_big:
+            keys.append((cfg, mapping.mode, w_small, plan.g, plan.p,
+                         plan.gather_flits, plan.unicast_flits,
+                         mapping.e_pes))
+    return tuple(keys)
+
+
+def _prefetch_hardware(per_layer, base_cfg: NocConfig,
+                       sim_rounds: int) -> None:
+    """Batch-prefetch the window sims a hardware point is about to score.
+
+    Collects the union of window-cache keys across every surviving
+    candidate of every layer and hands them to
+    :func:`repro.core.noc.vectorized.prefetch_windows` as one stacked
+    array pass — amortizing the candidate-mapping axis the scalar scoring
+    loop walks one key at a time (DESIGN.md S16).  Purely a cache warmer:
+    scoring results are bit-identical with it disabled.
+    """
+    if not (vectorized_enabled() and compiled_enabled()
+            and SIM_CACHE.enabled):
+        return
+    store = _eval_store()
+    keys: list = []
+    seen_shapes: set = set()
+    for layer, _base_r, keep in per_layer:
+        # Identically-shaped layers share keys (and eval-memo entries).
+        shape = (layer.R, layer.C, layer.F, layer.outputs)
+        if shape in seen_shapes:
+            continue
+        seen_shapes.add(shape)
+        for m in keep:
+            if _eval_key(layer, m, base_cfg, sim_rounds) not in store:
+                keys.extend(_window_keys(layer, m, base_cfg, sim_rounds))
+    if keys:
+        prefetch_windows(keys)
+
+
 def _score_hardware(payload) -> tuple[NetworkSchedule, int, int, dict]:
     """Score every layer on one hardware point (a pool-fanout unit).
 
@@ -181,16 +298,30 @@ def _score_hardware(payload) -> tuple[NetworkSchedule, int, int, dict]:
     # pool (and *is* the baseline mapping on the baseline hardware).
     anchor = Mapping(w, h, e, "ws", "ina", mcfg.q_list[0], None, chips)
     n_cands = n_sim = 0
-    assignments = []
+    rank_before = len(_rank_store())
+    per_layer = []
     for layer, base_r in zip(layers, base_results):
-        cands = layer_candidates(layer, hw, mcfg)
-        n_cands += len(cands)
-        ranked = sorted(cands, key=lambda m: (
-            analytic_latency(layer, m, base_cfg), m.sort_key))
-        keep = ranked[:mcfg.prune_keep]
-        if anchor in cands and anchor not in keep:
-            keep.append(anchor)
-        results = [(m, evaluate_mapping(layer, m, base_cfg,
+        # Candidates and their analytic ranking are pure functions of the
+        # layer's Eq.(1)-(4) shape (same determinants as the sim memo
+        # above), so identically-shaped layers share one ranked keep list.
+        rkey = ((layer.R, layer.C, layer.F, layer.outputs), hw, mcfg,
+                base_cfg)
+        hit = _rank_store().get(rkey)
+        if hit is None:
+            cands = layer_candidates(layer, hw, mcfg)
+            ranked = sorted(cands, key=lambda m: (
+                analytic_latency(layer, m, base_cfg), m.sort_key))
+            keep = ranked[:mcfg.prune_keep]
+            if anchor in cands and anchor not in keep:
+                keep.append(anchor)
+            hit = (tuple(keep), len(cands))
+            _rank_store()[rkey] = hit
+        n_cands += hit[1]
+        per_layer.append((layer, base_r, hit[0]))
+    _prefetch_hardware(per_layer, base_cfg, mcfg.sim_rounds)
+    assignments = []
+    for layer, base_r, keep in per_layer:
+        results = [(m, _evaluate_cached(layer, m, base_cfg,
                                         mcfg.sim_rounds, mcfg.package))
                    for m in keep]
         n_sim += len(results)
@@ -200,11 +331,14 @@ def _score_hardware(payload) -> tuple[NetworkSchedule, int, int, dict]:
     schedule = NetworkSchedule(workload=workload, hardware=hw,
                                assignments=tuple(assignments))
     # New memo entries = everything appended past the starting length
-    # (insertion-ordered dict, never deleted from within a generation).
+    # (insertion-ordered dicts, never deleted from within a generation).
     store = _eval_store()
     delta = {k: store[k]
              for k in islice(iter(store), memo_before, None)}
-    return schedule, n_cands, n_sim, delta
+    rstore = _rank_store()
+    rank_delta = {k: rstore[k]
+                  for k in islice(iter(rstore), rank_before, None)}
+    return schedule, n_cands, n_sim, delta, rank_delta
 
 
 def search_network(workload: str, layers: Sequence[LayerShape],
@@ -244,11 +378,12 @@ def search_network(workload: str, layers: Sequence[LayerShape],
         [(workload, layers, base_results, hw, mcfg, base_cfg) for hw in hws],
         jobs=jobs)
     schedules: list[NetworkSchedule] = []
-    for schedule, n_cands, n_sim, delta in scored:
+    for schedule, n_cands, n_sim, delta, rank_delta in scored:
         stats["hardware_evaluated"] += 1
         stats["candidates"] += n_cands
         stats["simulated"] += n_sim
         _eval_store().update(delta)
+        _rank_store().update(rank_delta)
         schedules.append(schedule)
 
     dominating = [s for s in schedules

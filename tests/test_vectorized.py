@@ -1,0 +1,334 @@
+"""PR-10 vectorized array-kernel backend (DESIGN.md S16).
+
+Contracts under test:
+
+1. The three-engine lattice is bit-identical — latency, done, delivered
+   AND the full EnergyLedger: vectorized window kernels (K1 closed form,
+   K2 column replay) vs the heap engine over every fig7-12 plan shape,
+   and the K3 DAG wavefront kernel vs heap over the shared collective /
+   faulted-collective corpora and seeded random programs.
+2. Fallback is clean: programs outside every lowered family raise
+   UnvectorizableProgram from ``lower_program``, are attributed in
+   VECTOR_STATS, and ``run_program(engine="auto")`` still answers them
+   (compiled/heap) with the oracle result.
+3. The batching axes fill SIM_CACHE with the same bits the serial path
+   would have produced: ``prefetch_windows`` (windows x candidate
+   mappings) and the mapper search are invisible to results.
+4. VECTOR_STATS mirrors ROUTE_STATS/COST_STATS: observable, resettable,
+   attributed per fallback reason.
+5. ``benchmarks/run.py`` can never silently overwrite a recorded
+   BENCH_<n>.json trajectory point (the numbering has gaps — no
+   BENCH_6).
+"""
+import dataclasses
+import os
+import random
+import sys
+
+import pytest
+
+from repro.analysis.corpus import (collective_programs,
+                                   faulted_collective_programs,
+                                   ws_plan_shapes)
+from repro.core.noc import (NocConfig, SIM_CACHE, compiled_disabled,
+                            fresh_sim_cache, sim_cache_disabled,
+                            simulate_layer)
+from repro.core.noc import vectorized
+from repro.core.noc.collective.engine import run_program
+from repro.core.noc.collective.schedule import (plan_collective,
+                                                ws_round_program)
+from repro.core.noc.traffic import clear_compiled_caches
+from repro.core.noc.vectorized import (UnvectorizableProgram, VECTOR_STATS,
+                                       lower_program, prefetch_windows,
+                                       reset_vector_stats, run_vectorized,
+                                       vector_stats, vectorized_disabled,
+                                       window_family, window_result)
+from repro.core.workloads import VGG16
+
+CFG = NocConfig()
+
+
+def _ld(ledger):
+    return dataclasses.asdict(ledger)
+
+
+def _heap(prog, cfg):
+    return run_program(prog, cfg, engine="heap")
+
+
+# --------------------------------------------------------------------------- #
+# 1. Oracle equivalence: window kernels (K1/K2) over the fig7-12 corpus
+# --------------------------------------------------------------------------- #
+def test_window_kernels_bit_identical_to_heap_on_fig_shapes():
+    """Every fig7-12 plan shape x window length: the closed-form (K1) or
+    column-replay (K2) window result equals the heap engine bit for bit —
+    latency AND the full EnergyLedger."""
+    answered = {"pipeline": 0, "chain": 0}
+    for shape in ws_plan_shapes(quick=True, cfg=CFG):
+        for window in (1, 4):
+            vec = window_result(CFG, shape["mode"], window, shape["g"],
+                                shape["p"], shape["gather_flits"],
+                                shape["unicast_flits"], shape["e_pes"])
+            if vec is None:          # fallback contract covered below
+                continue
+            answered[window_family(shape["mode"], shape["p"])] += 1
+            prog = ws_round_program(
+                CFG, shape["mode"], window, g=shape["g"], p=shape["p"],
+                gather_flits=shape["gather_flits"],
+                unicast_flits=shape["unicast_flits"], e_pes=shape["e_pes"])
+            heap = _heap(prog, CFG)
+            assert vec[0] == heap.latency_cycles, shape
+            assert _ld(vec[1]) == _ld(heap.ledger), shape
+    # Both families must actually run on the paper's own shapes.
+    assert answered["pipeline"] > 5 and answered["chain"] > 5, answered
+
+
+# --------------------------------------------------------------------------- #
+# 1b. Oracle equivalence: DAG wavefront kernel (K3) over the collective
+#     corpora — clean and fault-repaired
+# --------------------------------------------------------------------------- #
+def test_run_vectorized_matches_heap_on_collective_corpus():
+    reset_vector_stats()
+    lowered = 0
+    for case, cfg, prog in collective_programs():
+        try:
+            latency, ledger, done, delivered = run_vectorized(prog, cfg)
+        except UnvectorizableProgram:
+            continue
+        lowered += 1
+        heap = _heap(prog, cfg)
+        assert latency == heap.latency_cycles, case
+        assert done == heap.done, case
+        assert delivered == heap.delivered, case
+        assert _ld(ledger) == _ld(heap.ledger), case
+    assert lowered > 0
+    assert VECTOR_STATS["programs_lowered"] == lowered
+
+
+def test_run_vectorized_matches_heap_on_faulted_corpus():
+    lowered = 0
+    for case, cfg, _faults, prog in faulted_collective_programs(quick=True):
+        try:
+            latency, ledger, done, delivered = run_vectorized(prog, cfg)
+        except UnvectorizableProgram:
+            continue
+        lowered += 1
+        heap = _heap(prog, cfg)
+        assert (latency, done, delivered) == \
+            (heap.latency_cycles, heap.done, heap.delivered), case
+        assert _ld(ledger) == _ld(heap.ledger), case
+    assert lowered > 0          # detour-repaired trees still lower
+
+
+def test_engine_auto_dispatch_is_invisible_for_collectives():
+    """run_program's vectorized-first dispatch returns the oracle bits
+    whether the program lowers (K3) or falls back (compiled/heap)."""
+    for case, cfg, prog in collective_programs():
+        auto = run_program(prog, cfg, engine="auto")
+        heap = _heap(prog, cfg)
+        assert auto.latency_cycles == heap.latency_cycles, case
+        assert auto.done == heap.done, case
+        assert auto.delivered == heap.delivered, case
+        assert _ld(auto.ledger) == _ld(heap.ledger), case
+
+
+# --------------------------------------------------------------------------- #
+# 1c. Seeded random programs
+# --------------------------------------------------------------------------- #
+@pytest.mark.parametrize("seed", [0, 7, 23])
+def test_random_collectives_auto_equals_heap(seed):
+    rng = random.Random(seed)
+    nodes = [(x, y) for x in range(4) for y in range(4)]
+    for _ in range(8):
+        parts = rng.sample(nodes, rng.randint(2, 10))
+        op = rng.choice(("reduce", "broadcast", "gather", "allreduce"))
+        semantics = rng.choice(("ina", "eject_inject"))
+        algorithm = "rs_ag" if (op == "allreduce" and rng.random() < 0.5) \
+            else "reduce_bcast"
+        payload = rng.choice((32.0, 128.0, 512.0, 1024.0))
+        prog = plan_collective(op, parts, payload, CFG,
+                               algorithm=algorithm, semantics=semantics)
+        auto = run_program(prog, CFG, engine="auto")
+        heap = _heap(prog, CFG)
+        assert auto.latency_cycles == heap.latency_cycles, (op, semantics)
+        assert auto.delivered == heap.delivered, (op, semantics)
+        assert _ld(auto.ledger) == _ld(heap.ledger), (op, semantics)
+
+
+# --------------------------------------------------------------------------- #
+# 2. Fallback contract
+# --------------------------------------------------------------------------- #
+def test_inexpressible_program_falls_back_and_is_attributed():
+    """eject-inject trees serialize distinct packets through shared
+    ejection ports — real contention, outside every lowered family.
+    ``lower_program`` must refuse (attributed in VECTOR_STATS) and the
+    auto engine must still produce the oracle bits."""
+    parts = [(x, y) for x in range(4) for y in range(4)]
+    prog = plan_collective("reduce", parts, 512.0, CFG,
+                           semantics="eject_inject")
+    before = vector_stats()["fallbacks"]
+    with pytest.raises(UnvectorizableProgram):
+        lower_program(prog, CFG)
+    assert vector_stats()["fallbacks"] == before + 1
+    auto = run_program(prog, CFG, engine="auto")
+    heap = _heap(prog, CFG)
+    assert auto.latency_cycles == heap.latency_cycles
+    assert _ld(auto.ledger) == _ld(heap.ledger)
+
+
+def test_vectorized_disabled_restores_pr4_behaviour():
+    assert vectorized.vectorized_enabled()
+    with vectorized_disabled():
+        assert not vectorized.vectorized_enabled()
+        assert window_result(CFG, "ws_ina", 4, 8, 1, 2, 1, 2) is None
+        with fresh_sim_cache():
+            assert prefetch_windows(
+                [(CFG, "ws_ina", 4, 8, 1, 2, 1, 2)]) == 0
+    assert vectorized.vectorized_enabled()
+
+
+# --------------------------------------------------------------------------- #
+# 3. Batching axes: prefetch fills SIM_CACHE with the serial path's bits
+# --------------------------------------------------------------------------- #
+def test_prefetch_windows_matches_serial_window_results():
+    keys = []
+    for shape in ws_plan_shapes(quick=True, cfg=CFG)[:12]:
+        for window in (2, 8):
+            keys.append((CFG, shape["mode"], window, shape["g"],
+                         shape["p"], shape["gather_flits"],
+                         shape["unicast_flits"], shape["e_pes"]))
+    serial = {}
+    for key in keys:
+        hit = window_result(*key)
+        if hit is not None:
+            serial[key] = hit
+    reset_vector_stats()
+    with fresh_sim_cache():
+        answered = prefetch_windows(keys)
+        assert answered == len(serial)
+        stats = vector_stats()
+        assert stats["windows_batched"] > 1        # the array pass ran
+        for key, (latency, ledger) in serial.items():
+            assert key in SIM_CACHE
+            got_lat, got_ledger = SIM_CACHE.get(key)
+            assert got_lat == latency
+            assert _ld(got_ledger) == _ld(ledger)
+
+
+def test_simulate_layer_identical_across_all_three_engines():
+    layer = VGG16[8]
+    for mode in ("ws_ina", "ws_noina", "os_gather"):
+        with fresh_sim_cache(), compiled_disabled(), sim_cache_disabled():
+            clear_compiled_caches()
+            truth = simulate_layer(layer, mode, CFG, 2, sim_rounds=8)
+        with fresh_sim_cache(), vectorized_disabled():
+            clear_compiled_caches()
+            compiled = simulate_layer(layer, mode, CFG, 2, sim_rounds=8)
+        with fresh_sim_cache():
+            clear_compiled_caches()
+            vec = simulate_layer(layer, mode, CFG, 2, sim_rounds=8)
+        for r in (compiled, vec):
+            assert dataclasses.asdict(r) == dataclasses.asdict(truth), mode
+
+
+def test_mapper_search_identical_with_and_without_vectorized():
+    """The mapper's prefetch + rank/eval memos are invisible: identical
+    schedules, ratios, and Pareto candidates either way."""
+    from repro.core.workloads import mapper_workloads
+    from repro.mapper import QUICK_MAPPER, search_network
+    wl = mapper_workloads(conv=("alexnet",), transformers=())
+    with fresh_sim_cache():
+        clear_compiled_caches()
+        vec = search_network("alexnet", wl["alexnet"], QUICK_MAPPER)
+    with fresh_sim_cache(), vectorized_disabled():
+        clear_compiled_caches()
+        ref = search_network("alexnet", wl["alexnet"], QUICK_MAPPER)
+    assert vec.latency_x == ref.latency_x
+    assert vec.energy_x == ref.energy_x
+    assert vec.best.hardware == ref.best.hardware
+    assert [(c.hardware, c.latency_cycles, c.total_energy_pj)
+            for c in vec.pareto] == \
+        [(c.hardware, c.latency_cycles, c.total_energy_pj)
+         for c in ref.pareto]
+
+
+def test_hierarchy_cost_facade_identical_with_and_without_vectorized():
+    from repro.core.noc.collective import cost as flat_cost
+    from repro.core.noc.hierarchy import (hier_collective_cost,
+                                          square_hier_mesh)
+    hmesh = square_hier_mesh(4, chip_w=4, chip_h=4)
+    flat_cost._simulate.cache_clear()           # defeat the facade memo
+    clear_compiled_caches()
+    vec = hier_collective_cost("allreduce", hmesh, 4096.0, semantics="ina")
+    flat_cost._simulate.cache_clear()
+    clear_compiled_caches()
+    with vectorized_disabled():
+        ref = hier_collective_cost("allreduce", hmesh, 4096.0,
+                                   semantics="ina")
+    assert dataclasses.asdict(vec) == dataclasses.asdict(ref)
+
+
+# --------------------------------------------------------------------------- #
+# 4. VECTOR_STATS observability
+# --------------------------------------------------------------------------- #
+def test_vector_stats_reset_and_summary_shape():
+    reset_vector_stats()
+    base = vector_stats()
+    assert base["fallbacks"] == 0 and base["enabled"]
+    window_result(CFG, "ws_ina", 4, 8, 1, 2, 1, 2)
+    stats = vector_stats()
+    assert stats["windows_closed_form"] == 1
+    assert VECTOR_STATS["windows_closed_form"] == 1
+    stats["windows_closed_form"] = 99           # snapshot is a copy
+    assert VECTOR_STATS["windows_closed_form"] == 1
+    reset_vector_stats()
+    assert all(v == 0 for v in VECTOR_STATS.values())
+
+
+def test_vectorized_module_is_in_determinism_lint_scope():
+    from repro.analysis.lint import _DETERMINISM_SCOPE
+    path = "src/repro/core/noc/vectorized.py"
+    assert any(scope in path for scope in _DETERMINISM_SCOPE)
+
+
+# --------------------------------------------------------------------------- #
+# 5. BENCH numbering can never overwrite a recorded trajectory point
+# --------------------------------------------------------------------------- #
+def _bench_run_module():
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    if root not in sys.path:
+        sys.path.insert(0, root)
+    from benchmarks import run as bench_run
+    return bench_run
+
+
+def test_default_bench_path_skips_trajectory_gaps(tmp_path):
+    """Given BENCH_{4,5,7}.json on disk (the real trajectory has no
+    BENCH_6), the default must be BENCH_8.json — one past the highest,
+    never the gap, never an existing file."""
+    bench_run = _bench_run_module()
+    for n in (4, 5, 7):
+        (tmp_path / f"BENCH_{n}.json").write_text("{}")
+    args = type("A", (), {"quick": False})()
+    path = bench_run._default_bench_path(args, ["mapper_full"],
+                                         root=str(tmp_path))
+    assert os.path.basename(path) == "BENCH_8.json"
+    assert not os.path.exists(path)
+
+
+def test_default_bench_path_quick_and_partial_stay_out_of_trajectory(
+        tmp_path):
+    bench_run = _bench_run_module()
+    (tmp_path / "BENCH_4.json").write_text("{}")
+    quick = type("A", (), {"quick": True})()
+    full = type("A", (), {"quick": False})()
+    assert bench_run._default_bench_path(
+        quick, ["mapper_full"], root=str(tmp_path)).endswith(
+            os.path.join("results", "bench_snapshot.json"))
+    assert bench_run._default_bench_path(
+        full, ["tables"], root=str(tmp_path)).endswith(
+            os.path.join("results", "bench_snapshot.json"))
+    empty = tmp_path / "empty"
+    empty.mkdir()
+    assert os.path.basename(bench_run._default_bench_path(
+        full, ["mapper_full"], root=str(empty))) == "BENCH_4.json"
